@@ -1,0 +1,49 @@
+"""Fig. 3: component ablations — STE opt / no-opt / prune-low / 1-bit-RTN
+low sub-LoRA, across rho."""
+
+from repro.core import LoRAQuantConfig, quantize_lora_variant
+
+from .common import eval_loss, quantize_model_adapters, trained_setup
+
+
+def _fn(rho, **kw):
+    def fn(b, a):
+        import jax.numpy as jnp
+
+        ql = quantize_lora_variant(
+            b, a, LoRAQuantConfig(bits_high=2, rho=rho, ste_steps=60), **kw)
+        bq, aq = ql.materialize()
+        # pruned variants materialize at rank h < r: zero-pad back so the
+        # adapter tree keeps its static shapes
+        r = b.shape[-1]
+        if bq.shape[-1] < r:
+            bq = jnp.pad(bq, ((0, 0), (0, r - bq.shape[-1])))
+            aq = jnp.pad(aq, ((0, r - aq.shape[0]), (0, 0)))
+        return bq, aq, float(ql.total_bits()), ql.num_params()
+    return fn
+
+
+VARIANTS = {
+    "loraquant": {},
+    "no_opt": {"use_opt": False},
+    "prune": {"prune_low": True},
+    "rtn1_low": {"low_quantizer": "rtn1"},
+}
+
+
+def run(report):
+    cfg, model, params = trained_setup()
+    results = {}
+    for rho in (0.5, 0.8):
+        for name, kw in VARIANTS.items():
+            qp, bits = quantize_model_adapters(params, _fn(rho, **kw))
+            loss = eval_loss(cfg, model, qp)
+            results[(name, rho)] = loss
+            report(f"fig3,{name},rho={rho},avg_bits={bits:.3f},eval_ce={loss:.4f}")
+    ok_prune = all(results[("loraquant", r)] <= results[("prune", r)] + 0.02
+                   for r in (0.5, 0.8))
+    ok_rtn1 = all(results[("loraquant", r)] <= results[("rtn1_low", r)] + 0.02
+                  for r in (0.5, 0.8))
+    report(f"fig3.check,low_sublora_helps,{'PASS' if ok_prune else 'FAIL'}")
+    report(f"fig3.check,sign_beats_rtn1,{'PASS' if ok_rtn1 else 'FAIL'}")
+    return results

@@ -1,0 +1,32 @@
+"""Fig. 4: ratio-based dynamic h (Eq. 5) vs static global h — the
+bits ↔ quality frontier."""
+
+from repro.core import LoRAQuantConfig, quantize_lora, quantize_lora_variant
+
+from .common import eval_loss, quantize_model_adapters, trained_setup
+
+
+def run(report):
+    cfg, model, params = trained_setup()
+    frontier = []
+    for rho in (0.3, 0.5, 0.7, 0.9):
+        def fn(b, a, rho=rho):
+            ql = quantize_lora(b, a, LoRAQuantConfig(
+                rho=rho, bits_high=2, ste_steps=0))
+            bq, aq = ql.materialize()
+            return bq, aq, float(ql.total_bits()), ql.num_params()
+        qp, bits = quantize_model_adapters(params, fn)
+        loss = eval_loss(cfg, model, qp)
+        frontier.append(("ratio", rho, bits, loss))
+        report(f"fig4,ratio,rho={rho},avg_bits={bits:.3f},eval_ce={loss:.4f}")
+    for h in (2, 5, 8, 12):
+        def fn(b, a, h=h):
+            ql = quantize_lora_variant(b, a, LoRAQuantConfig(
+                bits_high=2, ste_steps=0), static_h=h)
+            bq, aq = ql.materialize()
+            return bq, aq, float(ql.total_bits()), ql.num_params()
+        qp, bits = quantize_model_adapters(params, fn)
+        loss = eval_loss(cfg, model, qp)
+        frontier.append(("static", h, bits, loss))
+        report(f"fig4,static,h={h},avg_bits={bits:.3f},eval_ce={loss:.4f}")
+    return frontier

@@ -1,0 +1,32 @@
+"""Fig. 6 / Appendix D: aggregate memory of N resident adapters —
+fp16 vs LoRAQuant 2@0.8 — against the (4-bit quantized) base model."""
+
+from repro.configs import get_config
+from repro.core import LoRAQuantConfig
+from repro.serving.engine import quantize_adapter_tree
+
+from .common import trained_setup
+
+
+def run(report):
+    cfg, model, params = trained_setup()
+    qa = quantize_adapter_tree(params["lora"],
+                               LoRAQuantConfig(rho=0.8, bits_high=2,
+                                               ste_steps=0))
+    avg_bits = qa.avg_bits()
+    # scale the measured AvgBits to the full-size llama2-7B-like adapter
+    full = get_config("llama3.2-3b")
+    n_lora_params = 0
+    d, f = full.d_model, full.d_ff
+    per_layer = (4 * (d * 16 + 16 * d)          # qkvo-ish
+                 + 3 * (d * 16 + 16 * f))       # ffn
+    n_lora_params = per_layer * full.n_layers
+    base_bytes = 3.2e9 * 0.5                     # 4-bit base (QLoRA)
+    for n_adapters in (1, 10, 50, 200, 1000):
+        fp16 = n_adapters * n_lora_params * 2 / 1e9
+        lq = n_adapters * n_lora_params * avg_bits / 8 / 1e9
+        report(f"fig6,n={n_adapters},fp16_gb={fp16:.2f},"
+               f"loraquant_gb={lq:.2f},base_gb={base_bytes/1e9:.2f}")
+    report(f"fig6.check,50_adapters_fp16_exceeds_base,"
+           f"{'PASS' if 50 * n_lora_params * 2 > base_bytes else 'FAIL'}")
+    return avg_bits

@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        --report reports/dryrun_all.json --out EXPERIMENTS_tables.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def fmt_b(x):
+    if x is None:
+        return "—"
+    if x >= 1e9:
+        return f"{x/1e9:.2f}GB"
+    return f"{x/1e6:.1f}MB"
+
+
+def render(reports):
+    single = [r for r in reports if not r.get("multi_pod")]
+    multi = [r for r in reports if r.get("multi_pod")]
+    out = []
+
+    out.append("### §Dry-run — compile proof, both meshes\n")
+    out.append("| arch | shape | 1-pod (16,16) | 2-pod (2,16,16) | "
+               "args/chip | temp/chip |")
+    out.append("|---|---|---|---|---|---|")
+    idx2 = {(r["arch"], r["shape"]): r for r in multi}
+    for r in single:
+        key = (r["arch"], r["shape"])
+        m = idx2.get(key, {})
+
+        def status(rr):
+            if "skipped" in rr:
+                return "SKIP"
+            if "error" in rr:
+                return "FAIL"
+            return f"OK ({rr.get('compile_s', '?')}s)"
+
+        mem = r.get("memory") or m.get("memory") or {}
+        argb = mem.get("argument_bytes") if isinstance(mem, dict) else None
+        tmpb = mem.get("temp_bytes") if isinstance(mem, dict) else None
+        out.append(f"| {r['arch']} | {r['shape']} | {status(r)} | "
+                   f"{status(m) if m else '—'} | {fmt_b(argb)} | {fmt_b(tmpb)} |")
+
+    out.append("\n### §Roofline — per-chip terms, single-pod (16,16), "
+               "TPU v5e (197 TF bf16, 819 GB/s HBM, 4×50 GB/s ICI)\n")
+    out.append("| arch | shape | compute | memory | collective | dominant | "
+               "roofline frac | useful-FLOPs ratio |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if "skipped" in r or "error" in r:
+            continue
+        rf = r.get("roofline_fraction")
+        uf = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r.get('compute_term_s'))} | "
+            f"{fmt_s(r.get('memory_term_s'))} | {fmt_s(r.get('collective_term_s'))} | "
+            f"{r.get('dominant_term', '—')} | "
+            f"{f'{rf:.3f}' if rf is not None else '—'} | "
+            f"{f'{uf:.2f}' if uf is not None else '—'} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--report", default="reports/dryrun_all.json")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+    reports = json.load(open(args.report))
+    text = render(reports)
+    if args.out:
+        open(args.out, "w").write(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

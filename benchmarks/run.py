@@ -1,0 +1,65 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig2]
+
+Prints ``name,metric=value,...`` CSV lines; ``*.check`` lines assert the
+paper's qualitative claims (PASS/FAIL).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset (table1,table2,fig2,fig3,fig4,fig6,kernels)")
+    args = p.parse_args(argv)
+
+    from . import (
+        bench_kernels,
+        fig2_split_strategy,
+        fig3_ablation,
+        fig4_h_selection,
+        fig6_memory,
+        table1_quality,
+        table2_avgbits,
+    )
+
+    suites = {
+        "kernels": bench_kernels.run,
+        "table2": table2_avgbits.run,
+        "fig6": fig6_memory.run,
+        "table1": table1_quality.run,
+        "fig2": fig2_split_strategy.run,
+        "fig3": fig3_ablation.run,
+        "fig4": fig4_h_selection.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+
+    lines = []
+
+    def report(line: str):
+        print(line)
+        sys.stdout.flush()
+        lines.append(line)
+
+    for name in wanted:
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---")
+        suites[name](report)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
+
+    fails = [l for l in lines if l.endswith("FAIL")]
+    print(f"# checks: {sum(1 for l in lines if l.endswith('PASS'))} pass, "
+          f"{len(fails)} fail")
+    for f in fails:
+        print(f"# FAILED: {f}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Multi-LoRA serving: many users' adapters resident in quantized form,
+segment-batched decoding, and the fused SGMV kernel on the hot path.
+
+    PYTHONPATH=src python examples/multi_lora_serving.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import LoRAQuantConfig
+from repro.core.quant import rtn_quantize
+from repro.kernels.quant_matmul.ops import sgmv_apply
+from repro.kernels.quant_matmul.ref import ref_sgmv
+from repro.launch.serve import main as serve_main
+
+
+def kernel_demo():
+    """The SGMV hot path: one launch serves a batch mixing 3 adapters."""
+    rng = np.random.default_rng(0)
+    d, r, n_adapters, tile = 512, 16, 3, 8
+    qas, qbts = [], []
+    for i in range(n_adapters):
+        a = jnp.asarray(rng.normal(size=(r, d)).astype(np.float32) * 0.02)
+        b = jnp.asarray(rng.normal(size=(d, r)).astype(np.float32) * 0.02)
+        qas.append(rtn_quantize(a, 2, 128, axis=1))
+        qbts.append(rtn_quantize(b, 2, 128, axis=0))
+    segs = [0, 1, 2, 1]                      # tile→adapter map
+    seg_ids = np.repeat(segs, tile)
+    x = jnp.asarray(rng.normal(size=(len(seg_ids), d)).astype(np.float32))
+    y = sgmv_apply(x, qas, qbts, jnp.asarray(segs, jnp.int32), tile_t=tile,
+                   interpret=True)
+    err = float(jnp.max(jnp.abs(y - ref_sgmv(x, qas, qbts, seg_ids))))
+    print(f"[sgmv] heterogeneous batch of {len(seg_ids)} tokens × "
+          f"{n_adapters} adapters in one kernel; maxerr vs oracle {err:.1e}")
+
+
+if __name__ == "__main__":
+    kernel_demo()
+    serve_main(["--arch", "llama3.2-3b", "--adapters", "4", "--requests", "8",
+                "--prompt-len", "16", "--max-new", "4"])

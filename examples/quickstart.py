@@ -1,0 +1,51 @@
+"""Quickstart: quantize a LoRA adapter with LoRAQuant and inspect the
+memory/quality trade-off vs baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import LoRAQuantConfig, quantize_lora
+from repro.core.baselines import bin_lora, billm_lora, pbllm_lora, rtn_lora
+
+
+def trained_looking_lora(m=1024, n=1024, r=16, decay=0.4, seed=0):
+    g = np.random.default_rng(seed)
+    u = np.linalg.qr(g.normal(size=(m, r)))[0]
+    v = np.linalg.qr(g.normal(size=(n, r)))[0]
+    s = np.exp(-decay * np.arange(r))
+    return (jnp.asarray((u * np.sqrt(s)).astype(np.float32)),
+            jnp.asarray((np.sqrt(s)[:, None] * v.T).astype(np.float32)))
+
+
+def main():
+    b, a = trained_looking_lora()
+    w = b @ a
+    wn = float(jnp.linalg.norm(w))
+    print(f"{'method':24s} {'avg_bits':>8s} {'rel_err':>8s}")
+
+    for name, rho, bits, refine in [
+        ("LoRAQuant 2@0.8", 0.8, 2, "ste"),
+        ("LoRAQuant 2@0.9", 0.9, 2, "ste"),
+        ("LoRAQuant 3@0.9", 0.9, 3, "ste"),
+        ("LoRAQuant 2@0.9 +ALS", 0.9, 2, "als"),
+    ]:
+        ql = quantize_lora(b, a, LoRAQuantConfig(rho=rho, bits_high=bits,
+                                                 refine=refine))
+        err = float(jnp.linalg.norm(ql.delta_w() - w)) / wn
+        print(f"{name:24s} {ql.avg_bits():8.3f} {err:8.4f}")
+
+    for name, qp in [
+        ("RTN 2-bit", rtn_lora(b, a, 2)),
+        ("BIN 1-bit", bin_lora(b, a)),
+        ("PB-LLM", pbllm_lora(b, a)),
+        ("BiLLM", billm_lora(b, a)),
+    ]:
+        err = float(jnp.linalg.norm(qp.delta_w() - w)) / wn
+        print(f"{name:24s} {qp.avg_bits:8.3f} {err:8.4f}")
+
+
+if __name__ == "__main__":
+    main()

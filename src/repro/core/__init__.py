@@ -1,0 +1,54 @@
+"""LoRAQuant core: the paper's contribution as a composable JAX module."""
+
+from .quant import (
+    GROUP_SIZE_DEFAULT,
+    QuantizedTensor,
+    binary_dequantize,
+    binary_fake_quant,
+    binary_quantize,
+    pack_codes,
+    rtn_dequantize,
+    rtn_fake_quant,
+    rtn_quantize,
+    storage_bits,
+    unpack_codes,
+)
+from .svd_split import SVDReparam, select_h, split_at, svd_reparam
+from .ste import optimize_pairs
+from .loraquant import (
+    LoRAQuantConfig,
+    QuantizedLoRA,
+    adapter_avg_bits,
+    dequantize_lora,
+    quantize_adapter_set,
+    quantize_lora,
+)
+from .ablations import quantize_lora_variant
+from . import baselines
+
+__all__ = [
+    "GROUP_SIZE_DEFAULT",
+    "QuantizedTensor",
+    "binary_dequantize",
+    "binary_fake_quant",
+    "binary_quantize",
+    "pack_codes",
+    "rtn_dequantize",
+    "rtn_fake_quant",
+    "rtn_quantize",
+    "storage_bits",
+    "unpack_codes",
+    "SVDReparam",
+    "select_h",
+    "split_at",
+    "svd_reparam",
+    "optimize_pairs",
+    "LoRAQuantConfig",
+    "QuantizedLoRA",
+    "adapter_avg_bits",
+    "dequantize_lora",
+    "quantize_adapter_set",
+    "quantize_lora",
+    "quantize_lora_variant",
+    "baselines",
+]

@@ -1,0 +1,298 @@
+"""Quantization primitives for LoRAQuant (paper §3.2).
+
+Two quantizers, both group-wise along a chosen axis:
+
+* ``rtn``   — asymmetric round-to-nearest with per-group fp scale ``S`` and
+              integer zero-point ``Z`` (Jacob et al., 2018; paper Eq. 6–7).
+* ``binary``— XNOR-style sign binarization with per-group scale
+              ``S = mean(|w|)`` (Rastegari et al., 2016; paper Eq. 8).
+
+Every quantizer comes in three forms:
+
+* ``*_quantize``   — real quantization: packed integer codes + scales
+                     (what is stored in HBM when serving).
+* ``*_dequantize`` — exact inverse of the storage path.
+* ``*_fake_quant`` — differentiable-through-STE simulated quantization used by
+                     the Alg. 2 optimization loop (``w + sg(fq(w) - w)``).
+
+Scales are kept in fp32 on TPU (fp16 is not TPU-native and bf16 lacks the
+mantissa for scale fidelity); the *bit accounting* (``storage_bits``) still
+charges 16 bits per scale exactly as the paper does, so reported AvgBits match
+Table 1 / Appendix C semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantizedTensor",
+    "rtn_quantize",
+    "rtn_dequantize",
+    "rtn_fake_quant",
+    "binary_quantize",
+    "binary_dequantize",
+    "binary_fake_quant",
+    "pack_codes",
+    "unpack_codes",
+    "storage_bits",
+    "GROUP_SIZE_DEFAULT",
+]
+
+GROUP_SIZE_DEFAULT = 128
+# Bits charged per stored scale / zero-point in AvgBits accounting (paper
+# stores scales in fp16 and the integer zero-point in `bits` bits).
+SCALE_BITS = 16
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("codes", "scale", "zero"),
+    meta_fields=("bits", "group_size", "axis", "orig_shape", "mode"),
+)
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A group-wise quantized 2-D tensor, packed for storage.
+
+    ``codes``  — uint8/uint32 packed integer codes, layout described by
+                 :func:`pack_codes`.
+    ``scale``  — fp32 per-group scales, shape ``(other_dim, n_groups)``.
+    ``zero``   — int32 per-group zero-points (RTN) or None-like zeros (binary).
+    ``mode``   — "rtn" | "binary".
+    ``axis``   — the axis of the *original* tensor along which groups run
+                 (0 = column-wise as for B', 1 = row-wise as for A').
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group_size: int
+    axis: int
+    orig_shape: tuple
+    mode: str
+
+    @property
+    def shape(self):
+        return self.orig_shape
+
+    def dequantize(self) -> jax.Array:
+        if self.mode == "rtn":
+            return rtn_dequantize(self)
+        return binary_dequantize(self)
+
+    def num_params(self) -> int:
+        return int(np.prod(self.orig_shape))
+
+
+# --------------------------------------------------------------------------
+# packing
+# --------------------------------------------------------------------------
+
+def _codes_per_word(bits: int) -> tuple[int, np.dtype]:
+    """Storage word layout: 1/2/4/8-bit codes pack densely into uint8;
+    3-bit codes pack 10-per-uint32 (2 wasted bits per word — storage only;
+    AvgBits accounting always charges the theoretical `bits`)."""
+    if bits in (1, 2, 4, 8):
+        return 8 // bits, np.dtype(np.uint8)
+    if bits == 3:
+        return 10, np.dtype(np.uint32)
+    raise ValueError(f"unsupported bitwidth {bits}")
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack integer codes (last axis) into storage words.
+
+    ``codes`` int32 in [0, 2**bits), shape (..., n). Returns
+    (..., ceil(n / per_word)) array of uint8 (bits∈{1,2,4,8}) or uint32 (3).
+    """
+    per_word, word_dtype = _codes_per_word(bits)
+    n = codes.shape[-1]
+    n_words = -(-n // per_word)
+    pad = n_words * per_word - n
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    codes = codes.reshape(codes.shape[:-1] + (n_words, per_word))
+    word_bits = word_dtype.itemsize * 8
+    acc = jnp.zeros(codes.shape[:-1], dtype=jnp.uint32)
+    for i in range(per_word):
+        acc = acc | (codes[..., i].astype(jnp.uint32) << (i * bits))
+    del word_bits
+    return acc.astype(word_dtype.name)
+
+
+def unpack_codes(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`; returns int32 codes of last-dim ``n``."""
+    per_word, _ = _codes_per_word(bits)
+    mask = (1 << bits) - 1
+    words = packed.astype(jnp.uint32)
+    cols = []
+    for i in range(per_word):
+        cols.append((words >> (i * bits)) & mask)
+    out = jnp.stack(cols, axis=-1).reshape(packed.shape[:-1] + (-1,))
+    return out[..., :n].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# group reshaping helpers
+# --------------------------------------------------------------------------
+
+def _to_groups(w: jax.Array, group_size: int, axis: int):
+    """Return (groups, n_groups, orig_len, pad) where ``groups`` has shape
+    (other_dim, n_groups, group_size) and the quantization axis is last.
+
+    Padding replicates the group's last valid element so min/max/mean|.| of
+    the group are unaffected by the pad values.
+    """
+    if w.ndim != 2:
+        raise ValueError("quantization operates on 2-D factors")
+    if axis == 0:
+        w = w.T  # quantize along columns of the original == rows here
+    other, n = w.shape
+    g = min(group_size, n)
+    n_groups = -(-n // g)
+    pad = n_groups * g - n
+    if pad:
+        w = jnp.concatenate([w, jnp.repeat(w[:, -1:], pad, axis=1)], axis=1)
+    return w.reshape(other, n_groups, g), n_groups, n, pad
+
+
+def _from_groups(groups: jax.Array, orig_len: int, axis: int) -> jax.Array:
+    other = groups.shape[0]
+    w = groups.reshape(other, -1)[:, :orig_len]
+    return w.T if axis == 0 else w
+
+
+# --------------------------------------------------------------------------
+# RTN (paper Eq. 6–7)
+# --------------------------------------------------------------------------
+
+def _rtn_params(groups: jax.Array, bits: int):
+    qmax = float(2**bits - 1)  # qmin = 0 (asymmetric unsigned grid)
+    wmin = jnp.min(groups, axis=-1)
+    wmax = jnp.max(groups, axis=-1)
+    scale = (wmax - wmin) / qmax
+    scale = jnp.where(scale <= 0, jnp.ones_like(scale), scale)
+    zero = jnp.round(-wmin / scale)  # qmin - min/S with qmin = 0
+    zero = jnp.clip(zero, 0.0, qmax)
+    return scale.astype(jnp.float32), zero, qmax
+
+
+def rtn_quantize(
+    w: jax.Array,
+    bits: int,
+    group_size: int = GROUP_SIZE_DEFAULT,
+    axis: int = 1,
+) -> QuantizedTensor:
+    """Asymmetric group-wise RTN. ``axis`` is the grouping axis of ``w``."""
+    groups, _, _, _ = _to_groups(w.astype(jnp.float32), group_size, axis)
+    scale, zero, qmax = _rtn_params(groups, bits)
+    q = jnp.round(groups / scale[..., None]) + zero[..., None]
+    q = jnp.clip(q, 0.0, qmax).astype(jnp.int32)
+    packed = pack_codes(q, bits)
+    return QuantizedTensor(
+        codes=packed,
+        scale=scale,
+        zero=zero.astype(jnp.int32),
+        bits=bits,
+        group_size=min(group_size, w.shape[axis]),
+        axis=axis,
+        orig_shape=tuple(w.shape),
+        mode="rtn",
+    )
+
+
+def rtn_dequantize(q: QuantizedTensor) -> jax.Array:
+    g = q.group_size
+    other = q.scale.shape[0]
+    n_groups = q.scale.shape[1]
+    codes = unpack_codes(q.codes, q.bits, g)  # (other, n_groups, g)
+    codes = codes.reshape(other, n_groups, g)
+    w = q.scale[..., None] * (codes.astype(jnp.float32) - q.zero[..., None].astype(jnp.float32))
+    orig_len = q.orig_shape[q.axis]
+    return _from_groups(w, orig_len, q.axis)
+
+
+def rtn_fake_quant(
+    w: jax.Array,
+    bits: int,
+    group_size: int = GROUP_SIZE_DEFAULT,
+    axis: int = 1,
+) -> jax.Array:
+    """Differentiable (STE) simulated RTN quantization, same grid as storage."""
+    groups, _, orig_len, _ = _to_groups(w, group_size, axis)
+    scale, zero, qmax = _rtn_params(jax.lax.stop_gradient(groups), bits)
+    q = jnp.clip(jnp.round(groups / scale[..., None]) + zero[..., None], 0.0, qmax)
+    deq = scale[..., None] * (q - zero[..., None])
+    fq = _from_groups(deq, orig_len, axis)
+    return w + jax.lax.stop_gradient(fq - w)
+
+
+# --------------------------------------------------------------------------
+# binary / sign quantization (paper Eq. 8)
+# --------------------------------------------------------------------------
+
+def binary_quantize(
+    w: jax.Array,
+    group_size: int = GROUP_SIZE_DEFAULT,
+    axis: int = 1,
+) -> QuantizedTensor:
+    """Sign binarization with the Frobenius-optimal scale ``mean(|w|)``."""
+    groups, _, _, _ = _to_groups(w.astype(jnp.float32), group_size, axis)
+    scale = jnp.mean(jnp.abs(groups), axis=-1).astype(jnp.float32)
+    bit = (groups >= 0).astype(jnp.int32)  # sign(x): 1 if x >= 0 else -1
+    packed = pack_codes(bit, 1)
+    return QuantizedTensor(
+        codes=packed,
+        scale=scale,
+        zero=jnp.zeros_like(scale, dtype=jnp.int32),
+        bits=1,
+        group_size=min(group_size, w.shape[axis]),
+        axis=axis,
+        orig_shape=tuple(w.shape),
+        mode="binary",
+    )
+
+
+def binary_dequantize(q: QuantizedTensor) -> jax.Array:
+    g = q.group_size
+    other, n_groups = q.scale.shape
+    bit = unpack_codes(q.codes, 1, g).reshape(other, n_groups, g)
+    sign = bit.astype(jnp.float32) * 2.0 - 1.0
+    w = q.scale[..., None] * sign
+    return _from_groups(w, q.orig_shape[q.axis], q.axis)
+
+
+def binary_fake_quant(
+    w: jax.Array,
+    group_size: int = GROUP_SIZE_DEFAULT,
+    axis: int = 1,
+) -> jax.Array:
+    groups, _, orig_len, _ = _to_groups(w, group_size, axis)
+    scale = jnp.mean(jnp.abs(jax.lax.stop_gradient(groups)), axis=-1)
+    sign = jnp.where(groups >= 0, 1.0, -1.0)
+    deq = scale[..., None] * sign
+    fq = _from_groups(deq, orig_len, axis)
+    return w + jax.lax.stop_gradient(fq - w)
+
+
+# --------------------------------------------------------------------------
+# bit accounting (paper Eq. 10 / Appendix C conventions)
+# --------------------------------------------------------------------------
+
+def storage_bits(q: QuantizedTensor) -> int:
+    """Total bits this quantized tensor occupies under the paper's accounting:
+    ``bits`` per weight + 16-bit scale per group (+ a ``bits``-wide integer
+    zero-point per group for RTN). Matches e.g. BIN = 1 + 16/128 = 1.13."""
+    n_params = q.num_params()
+    n_groups = int(np.prod(q.scale.shape))
+    total = n_params * q.bits + n_groups * SCALE_BITS
+    if q.mode == "rtn":
+        total += n_groups * q.bits
+    return total

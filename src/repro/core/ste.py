@@ -1,0 +1,156 @@
+"""Straight-through-estimator refinement of sub-LoRA factors (paper §3.3, Alg. 2).
+
+For every singular pair ``(b_i, a_i)`` (column i of B_•, row i of A_•) we solve
+
+    min_{b*, a*}  ‖ b_i a_iᵀ − D(Q(b*)) D(Q(a*))ᵀ ‖_F
+
+with T steps of gradient descent, gradients flowing through the quantizer by
+the straight-through estimator (round ≈ identity inside the clip range).
+
+The paper loops over pairs in Python; pairs are independent, so we ``vmap``
+over the rank dimension and ``lax.scan`` over steps — one fused XLA program
+optimizes every pair of a sub-LoRA simultaneously (identical math, ~100×
+fewer dispatches).
+
+A rank-1 Frobenius identity avoids materializing the m×n outer products:
+
+    ‖b aᵀ − b̂ âᵀ‖_F² = ‖b‖²‖a‖² − 2(bᵀb̂)(aᵀâ) + ‖b̂‖²‖â‖²
+
+so each pair's loss is O(m + n), not O(m n).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .quant import binary_fake_quant, rtn_fake_quant
+
+__all__ = ["optimize_pairs", "pair_loss", "als_refine_pairs"]
+
+
+def _fq_vec(v: jax.Array, mode: str, bits: int, group_size: int) -> jax.Array:
+    """Fake-quantize a single vector with the same grouping the storage path
+    uses for one column of B' / one row of A' (groups within the vector)."""
+    fq = rtn_fake_quant if mode == "rtn" else binary_fake_quant
+    kwargs = dict(group_size=group_size, axis=1)
+    if mode == "rtn":
+        return fq(v[None, :], bits, **kwargs)[0]
+    return fq(v[None, :], **kwargs)[0]
+
+
+def pair_loss(b_opt, a_opt, b_ref, a_ref, mode: str, bits: int, group_size: int):
+    """Rank-1 Frobenius reconstruction loss for one singular pair."""
+    bq = _fq_vec(b_opt, mode, bits, group_size)
+    aq = _fq_vec(a_opt, mode, bits, group_size)
+    bb = jnp.vdot(b_ref, b_ref) * jnp.vdot(a_ref, a_ref)
+    cross = jnp.vdot(b_ref, bq) * jnp.vdot(a_ref, aq)
+    qq = jnp.vdot(bq, bq) * jnp.vdot(aq, aq)
+    return bb - 2.0 * cross + qq
+
+
+@partial(jax.jit, static_argnames=("mode", "bits", "group_size", "steps"))
+def optimize_pairs(
+    b: jax.Array,  # (m, k) — k singular columns of B_•
+    a: jax.Array,  # (k, n) — k singular rows of A_•
+    *,
+    mode: str,
+    bits: int,
+    group_size: int,
+    steps: int = 100,
+    lr: float = 1e-3,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 2 for all ``k`` pairs at once. Returns refined ``(B*, A*)``."""
+    if steps <= 0:
+        return b, a
+    b32 = b.astype(jnp.float32).T  # (k, m): one row per pair
+    a32 = a.astype(jnp.float32)    # (k, n)
+
+    def single_loss(bv, av, b_ref, a_ref):
+        return pair_loss(bv, av, b_ref, a_ref, mode, bits, group_size)
+
+    grad_fn = jax.vmap(jax.grad(single_loss, argnums=(0, 1)))
+
+    # Adam-normalized STE descent with RMS-relative step size. The paper uses
+    # plain GD with a global η, but the per-pair loss curvature scales with
+    # s_i² (pairs carry factors √s_i), so a single absolute η either diverges
+    # on leading pairs or stalls on trailing ones. We use diagonal Adam and
+    # multiply its unit-scale step by each pair's weight RMS, making ``lr``
+    # a *relative* per-step movement (default 1% of weight magnitude).
+    # The objective and the STE gradient are exactly the paper's.
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    rms_b = jnp.sqrt(jnp.mean(b32**2, axis=1, keepdims=True) + 1e-12)  # (k,1)
+    rms_a = jnp.sqrt(jnp.mean(a32**2, axis=1, keepdims=True) + 1e-12)
+
+    def step(carry, t):
+        bo, ao, mb, vb, ma, va = carry
+        gb, ga = grad_fn(bo, ao, b32, a32)
+        mb = b1 * mb + (1 - b1) * gb
+        vb = b2 * vb + (1 - b2) * gb * gb
+        ma = b1 * ma + (1 - b1) * ga
+        va = b2 * va + (1 - b2) * ga * ga
+        tc = t.astype(jnp.float32) + 1.0
+        corr = jnp.sqrt(1 - b2**tc) / (1 - b1**tc)
+        bo = bo - lr * rms_b * corr * mb / (jnp.sqrt(vb) + eps)
+        ao = ao - lr * rms_a * corr * ma / (jnp.sqrt(va) + eps)
+        return (bo, ao, mb, vb, ma, va), None
+
+    zeros = (jnp.zeros_like(b32), jnp.zeros_like(b32),
+             jnp.zeros_like(a32), jnp.zeros_like(a32))
+    (bo, ao, *_), _ = jax.lax.scan(
+        step, (b32, a32) + zeros, jnp.arange(steps), length=steps
+    )
+    return bo.T.astype(b.dtype), ao.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper refinement: per-pair rank-1 alternating least squares.
+#
+# The paper's STE-GD wanders on the piecewise-flat quantization landscape
+# (measured: ≤1% recon-error gain at best, divergence at larger steps). The
+# same Eq.-9 objective admits a closed-form alternation: with the dequantized
+# â fixed, the best rescaling of pair i is the scalar projection
+#     β_i = (a_i · â_i) / (â_i · â_i),   b_i* ← β_i b_i
+# and symmetrically for a. Each half-step is optimal given the other factor,
+# converges in ~2 iterations, and cuts recon error ~15% on decaying-spectrum
+# adapters (see tests/test_ste.py). Selected via LoRAQuantConfig.refine="als".
+# ---------------------------------------------------------------------------
+
+from .quant import binary_quantize, rtn_quantize  # noqa: E402
+
+
+@partial(jax.jit, static_argnames=("mode", "bits", "group_size", "iters"))
+def als_refine_pairs(
+    b: jax.Array,  # (m, k)
+    a: jax.Array,  # (k, n)
+    *,
+    mode: str,
+    bits: int,
+    group_size: int,
+    iters: int = 4,
+) -> tuple[jax.Array, jax.Array]:
+    b32 = b.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+
+    def deq_b(x):
+        q = (rtn_quantize(x, bits, group_size, axis=0) if mode == "rtn"
+             else binary_quantize(x, group_size, axis=0))
+        return q.dequantize()
+
+    def deq_a(x):
+        q = (rtn_quantize(x, bits, group_size, axis=1) if mode == "rtn"
+             else binary_quantize(x, group_size, axis=1))
+        return q.dequantize()
+
+    bo, ao = b32, a32
+    for _ in range(iters):
+        qa = deq_a(ao)                                   # (k, n)
+        beta = jnp.sum(a32 * qa, axis=1) / (jnp.sum(qa * qa, axis=1) + 1e-12)
+        bo = b32 * beta[None, :]
+        qb = deq_b(bo)                                   # (m, k)
+        alpha = jnp.sum(b32 * qb, axis=0) / (jnp.sum(qb * qb, axis=0) + 1e-12)
+        ao = a32 * alpha[:, None]
+    return bo.astype(b.dtype), ao.astype(a.dtype)

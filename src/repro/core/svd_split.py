@@ -1,0 +1,77 @@
+"""SVD reparameterization and sub-LoRA splitting (paper §3.1).
+
+Given a LoRA ``ΔW = B A`` (``B: m×r``, ``A: r×n``), reparameterize via the
+truncated SVD of the product, ``BA = U S Vᵀ``, into ``B' = U S^{1/2}`` and
+``A' = S^{1/2} Vᵀ`` (Eq. 1–2), then split at the variance-coverage index ``h``
+(Eq. 5) into a high-importance and a low-importance sub-LoRA (Eq. 3–4).
+
+The SVD is computed **without materializing the m×n product**: QR-factor both
+skinny factors and SVD the small r×r core — O((m+n) r²) instead of O(m n r).
+This matters at framework scale (e.g. qwen2-vl-72b has m = 29568 FFN rows and
+thousands of adapters to quantize).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SVDReparam", "svd_reparam", "select_h", "split_at"]
+
+
+class SVDReparam(NamedTuple):
+    """``b_prime @ a_prime == B @ A`` with importance sorted by ``s`` (desc)."""
+
+    b_prime: jax.Array  # (m, r) = U S^{1/2}
+    a_prime: jax.Array  # (r, n) = S^{1/2} Vᵀ
+    s: jax.Array        # (r,) singular values, descending
+
+
+def svd_reparam(b: jax.Array, a: jax.Array) -> SVDReparam:
+    """Reparameterize ``(B, A)`` to ``(B', A')`` per paper Eq. 1–2.
+
+    Uses the QR-core-SVD identity:
+      B = Q_b R_b,  Aᵀ = Q_a R_a  ⇒  BA = Q_b (R_b R_aᵀ) Q_aᵀ
+      SVD(R_b R_aᵀ) = U_c S V_cᵀ  ⇒  U = Q_b U_c,  V = Q_a V_c.
+    """
+    b = b.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    qb, rb = jnp.linalg.qr(b)           # (m, r), (r, r)
+    qa, ra = jnp.linalg.qr(a.T)         # (n, r), (r, r)
+    core = rb @ ra.T                    # (r, r)
+    uc, s, vct = jnp.linalg.svd(core, full_matrices=False)
+    sqrt_s = jnp.sqrt(s)
+    b_prime = (qb @ uc) * sqrt_s[None, :]
+    a_prime = sqrt_s[:, None] * (vct @ qa.T)
+    return SVDReparam(b_prime=b_prime, a_prime=a_prime, s=s)
+
+
+def select_h(s: jax.Array | np.ndarray, rho: float) -> int:
+    """Smallest ``h`` with cumulative variance ratio ≥ rho (paper Eq. 5).
+
+    Host-side (concrete) computation: the PTQ pipeline needs a static split
+    index to shape the sub-LoRAs. Always returns ``1 <= h <= r``.
+    """
+    s = np.asarray(s, dtype=np.float64)
+    var = s**2
+    total = var.sum()
+    if total <= 0.0:
+        return 1
+    frac = np.cumsum(var) / total
+    h = int(np.searchsorted(frac, rho - 1e-12) + 1)
+    return max(1, min(h, s.shape[0]))
+
+
+def split_at(rep: SVDReparam, h: int):
+    """Split a reparameterized LoRA at index ``h`` (paper Eq. 3–4).
+
+    Returns ``((B_h, A_h), (B_l, A_l))``; the low part is ``None`` when
+    ``h == r`` (everything deemed important).
+    """
+    r = rep.s.shape[0]
+    high = (rep.b_prime[:, :h], rep.a_prime[:h, :])
+    low = None if h >= r else (rep.b_prime[:, h:], rep.a_prime[h:, :])
+    return high, low

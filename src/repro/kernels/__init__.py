@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical serving path: fused
+dequantization of packed LoRAQuant factors + skinny matmuls (single-adapter
+and SGMV multi-adapter variants). Validated on CPU via interpret=True; the
+pure-jnp oracle lives in quant_matmul/ref.py."""
+
+from .quant_matmul import lora_apply_quantized, sgmv_apply
+
+__all__ = ["lora_apply_quantized", "sgmv_apply"]

@@ -1,0 +1,4 @@
+from .ops import lora_apply_quantized, quant_matmul_rhs, sgmv_apply
+from . import ref
+
+__all__ = ["lora_apply_quantized", "quant_matmul_rhs", "sgmv_apply", "ref"]

@@ -1,0 +1,240 @@
+"""Pallas TPU kernels: fused dequantize + skinny matmul for packed LoRA
+factors, plus the segment-gathered multi-adapter (SGMV) variant.
+
+TPU adaptation of Punica's CUDA SGMV (DESIGN.md §2): instead of warp-level
+gathers, requests are host-bucketed into contiguous *segments* per adapter;
+the grid walks token tiles and a scalar-prefetched ``tile→adapter`` map
+selects which adapter's packed codes the BlockSpec index_map pulls into
+VMEM. Dequantization (bit-unpack via lane shifts, group-scale expansion via
+broadcast-reshape) happens in VMEM/VREGs; only packed bytes cross HBM→VMEM,
+so adapter bandwidth is AvgBits/16 of the fp16 path — these matmuls are
+memory-bound at decode, so bandwidth is wall-time.
+
+Layout contract (== ``repro.core.quant`` storage):
+  codes  (R, G, g/per) uint8   — ``per`` = 8/bits codes per byte, little-end
+  scale  (R, G) fp32
+  zero   (R, G) int32          — RTN only
+ops.py reshapes codes to (R, K/per) before the call; R is padded to the
+fp32 sublane multiple (8).
+
+VMEM budgeting (v5e, 128-lane): token tile Tt=8..128, feature tile
+Kt=512..2048 (multiple of 128·per); worst tile set
+x(128×2048·4B) + codes(16×512) + w(16×2048×4) ≈ 1.2 MB ≪ 16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_dequant(codes, scale, zero, bits: int):
+    """codes (R, C) uint8 → fp32 (R, C·per) with per-group scales applied.
+
+    Bit-unpack: ``per`` lane-shift planes stacked on a new minor axis then
+    collapsed — the collapse keeps the little-endian in-byte order so the
+    output column order equals the logical weight order.
+    """
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    w = codes.astype(jnp.int32)
+    planes = [(w >> (bits * i)) & mask for i in range(per)]
+    q = jnp.stack(planes, axis=-1)                    # (R, C, per)
+    r, c = w.shape
+    q = q.reshape(r, c * per).astype(jnp.float32)     # (R, K)
+    g = q.shape[1] // scale.shape[1]                  # group size
+    s_full = jnp.broadcast_to(scale[:, :, None], scale.shape + (g,)).reshape(r, -1)
+    if zero is None:                                  # binary: {0,1} → ±scale
+        return s_full * (q * 2.0 - 1.0)
+    z_full = jnp.broadcast_to(
+        zero.astype(jnp.float32)[:, :, None], zero.shape + (g,)).reshape(r, -1)
+    return s_full * (q - z_full)
+
+
+# --------------------------------------------------------------------------
+# single-adapter: h = x @ dequant(A)ᵀ      (A: (R, K) row-grouped)
+# --------------------------------------------------------------------------
+
+def _matmul_rhs_kernel(x_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+                       bits: int, binary: bool):
+    nj = pl.program_id(1)
+    w = _unpack_dequant(
+        codes_ref[...], scale_ref[...],
+        None if binary else zero_ref[...], bits)      # (R, Kt)
+    part = jnp.dot(x_ref[...].astype(jnp.float32), w.T,
+                   preferred_element_type=jnp.float32)  # (Tt, R)
+
+    @pl.when(nj == 0)
+    def _():
+        o_ref[...] = part
+
+    @pl.when(nj != 0)
+    def _():
+        o_ref[...] += part
+
+
+def matmul_rhs(x, codes, scale, zero, *, bits: int, binary: bool,
+               tile_t: int = 128, tile_k: int = 512, interpret: bool = False):
+    """x (T, K) @ dequant(codes...)ᵀ → (T, R) fp32. K % tile_k == 0 required
+    (ops.py guarantees by construction: K is a d_model-like multiple of 128).
+    """
+    t, k = x.shape
+    r = codes.shape[0]
+    per = 8 // bits
+    tile_t = min(tile_t, t)
+    tile_k = min(tile_k, k)
+    grid = (t // tile_t, k // tile_k)
+    g_per_tile = scale.shape[1] // grid[1]
+
+    kern = functools.partial(_matmul_rhs_kernel, bits=bits, binary=binary)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, tile_k), lambda i, j: (i, j)),
+            pl.BlockSpec((r, tile_k // per), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale, zero)
+
+
+# --------------------------------------------------------------------------
+# single-adapter: y = h @ dequant(Bᵀ)      (Bᵀ: (R, M) row-grouped)
+# --------------------------------------------------------------------------
+
+def _matmul_out_kernel(h_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+                       bits: int, binary: bool):
+    w = _unpack_dequant(
+        codes_ref[...], scale_ref[...],
+        None if binary else zero_ref[...], bits)      # (R, Mt)
+    o_ref[...] = jnp.dot(h_ref[...].astype(jnp.float32), w,
+                         preferred_element_type=jnp.float32)
+
+
+def matmul_out(h, codes, scale, zero, *, bits: int, binary: bool,
+               tile_t: int = 128, tile_m: int = 512, interpret: bool = False):
+    """h (T, R) @ dequant(codes: (R, M))ᵀ-free → (T, M) fp32."""
+    t, r = h.shape
+    per = 8 // bits
+    m = codes.shape[1] * per
+    tile_t = min(tile_t, t)
+    tile_m = min(tile_m, m)
+    grid = (t // tile_t, m // tile_m)
+    g_per_tile = scale.shape[1] // grid[1]
+
+    kern = functools.partial(_matmul_out_kernel, bits=bits, binary=binary)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, tile_m // per), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, tile_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        interpret=interpret,
+    )(h, codes, scale, zero)
+
+
+# --------------------------------------------------------------------------
+# SGMV: per-token-tile adapter selection via scalar prefetch
+# --------------------------------------------------------------------------
+
+def _sgmv_kernel(seg_map_ref, x_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+                 bits: int, binary: bool):
+    w = _unpack_dequant(
+        codes_ref[0], scale_ref[0],
+        None if binary else zero_ref[0], bits)        # (R, K)
+    o_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32), w.T,
+                         preferred_element_type=jnp.float32)
+
+
+def sgmv_rhs(x, codes, scale, zero, seg_map, *, bits: int, binary: bool,
+             tile_t: int = 8, interpret: bool = False):
+    """Segment-gathered h = x @ Aᵀ with per-tile adapters.
+
+    x (T, K); codes (NA, R, K/per); seg_map (T/tile_t,) int32 — adapter id of
+    each token tile (host-side bucketing pads segments to tile multiples).
+    """
+    t, k = x.shape
+    na, r, _ = codes.shape
+    per = 8 // bits
+    grid = (t // tile_t,)
+
+    kern = functools.partial(_sgmv_kernel, bits=bits, binary=binary)
+    grid_spec = pl.GridSpec(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, k), lambda i, seg: (i, 0)),
+            pl.BlockSpec((1, r, k // per), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, r), lambda i, seg: (i, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
+        out_shape=jax.ShapeDtypeStruct((t, r), jnp.float32),
+        interpret=interpret,
+    )(seg_map, x, codes, scale, zero)
+
+
+def _sgmv_out_kernel(seg_map_ref, h_ref, codes_ref, scale_ref, zero_ref,
+                     o_ref, *, bits: int, binary: bool):
+    w = _unpack_dequant(
+        codes_ref[0], scale_ref[0],
+        None if binary else zero_ref[0], bits)        # (R, M)
+    o_ref[...] = jnp.dot(h_ref[...].astype(jnp.float32), w,
+                         preferred_element_type=jnp.float32)
+
+
+def sgmv_out(h, codes, scale, zero, seg_map, *, bits: int, binary: bool,
+             tile_t: int = 8, interpret: bool = False):
+    """Segment-gathered y = h @ dequant(Bᵀ) with per-tile adapters.
+
+    h (T, R); codes (NA, R, M/per); seg_map (T/tile_t,)."""
+    t, r = h.shape
+    na = codes.shape[0]
+    per = 8 // bits
+    m = codes.shape[2] * per
+    grid = (t // tile_t,)
+
+    kern = functools.partial(_sgmv_out_kernel, bits=bits, binary=binary)
+    grid_spec = pl.GridSpec(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, r), lambda i, seg: (i, 0)),
+            pl.BlockSpec((1, r, codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, m), lambda i, seg: (i, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        interpret=interpret,
+    )(seg_map, h, codes, scale, zero)
+
+
+def pltpu_grid(grid_spec, num_scalar_prefetch: int):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=grid_spec.grid,
+        in_specs=grid_spec.in_specs,
+        out_specs=grid_spec.out_specs,
+    )

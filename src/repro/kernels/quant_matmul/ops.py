@@ -1,0 +1,151 @@
+"""jit'd public wrappers around the Pallas quant-matmul kernels.
+
+These adapt :class:`repro.core.quant.QuantizedTensor` storage into the
+kernel layout (flatten group dims, pad the rank to the fp32 sublane
+multiple) and provide the full sub-LoRA application:
+
+    lora_apply_quantized(x, qlora) ≈ x @ qlora.delta_w().T
+
+``interpret=True`` everywhere in this container (CPU validation of the TPU
+kernel body); on real TPUs pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.loraquant import QuantizedLoRA
+from repro.core.quant import QuantizedTensor
+
+from .kernel import matmul_out, matmul_rhs, sgmv_rhs
+
+SUBLANE = 8
+
+
+def _kernel_layout(q: QuantizedTensor, pad_r: Optional[int] = None):
+    """QuantizedTensor → (codes (R, K/per), scale (R, G), zero (R, G)).
+
+    Works for row-grouped (axis=1) tensors; column-grouped B factors
+    (axis=0) are the same buffers viewed as Bᵀ. R is zero-padded to the
+    sublane multiple (zero scale rows dequantize to 0 — no effect).
+    """
+    r = q.scale.shape[0]
+    codes = q.codes.reshape(r, -1)
+    scale = q.scale
+    zero = q.zero
+    rp = pad_r or (-(-r // SUBLANE) * SUBLANE)
+    if rp != r:
+        codes = jnp.pad(codes, ((0, rp - r), (0, 0)))
+        scale = jnp.pad(scale, ((0, rp - r), (0, 0)))
+        zero = jnp.pad(zero, ((0, rp - r), (0, 0)))
+    return codes, scale, zero, r
+
+
+def _pad_tokens(x, tile_t):
+    t = x.shape[0]
+    tp = -(-t // tile_t) * tile_t
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+    return x, t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_t", "tile_k"))
+def quant_matmul_rhs(x, codes, scale, zero, *, bits, binary, interpret=True,
+                     tile_t=128, tile_k=512):
+    return matmul_rhs(x, codes, scale, zero, bits=bits, binary=binary,
+                      tile_t=tile_t, tile_k=tile_k, interpret=interpret)
+
+
+def _side(x, q: QuantizedTensor, interpret, tile_t):
+    codes, scale, zero, r = _kernel_layout(q)
+    binary = q.mode == "binary"
+    k = x.shape[1]
+    tile_k = k if k <= 2048 else 2048
+    while k % tile_k:
+        tile_k //= 2
+    h = matmul_rhs(x, codes, scale, zero, bits=q.bits, binary=binary,
+                   tile_t=tile_t, tile_k=max(tile_k, 128) if k >= 128 else k,
+                   interpret=interpret)
+    return h, r
+
+
+def _out_side(h, q: QuantizedTensor, interpret, tile_t):
+    codes, scale, zero, r = _kernel_layout(q)
+    if h.shape[1] != codes.shape[0]:
+        h = jnp.pad(h, ((0, 0), (0, codes.shape[0] - h.shape[1])))
+    binary = q.mode == "binary"
+    per = 8 // q.bits
+    m = codes.shape[1] * per
+    tile_m = m if m <= 2048 else 2048
+    while m % tile_m:
+        tile_m //= 2
+    return matmul_out(h, codes, scale, zero, bits=q.bits, binary=binary,
+                      tile_t=tile_t, tile_m=max(tile_m, 128) if m >= 128 else m,
+                      interpret=interpret)
+
+
+def lora_apply_quantized(
+    x: jax.Array,                    # (T, K) activations
+    qlora: QuantizedLoRA,
+    *,
+    scaling: float = 1.0,
+    interpret: bool = True,
+    tile_t: int = 128,
+) -> jax.Array:
+    """Fused packed-LoRA application: high (RTN) + low (binary) sub-LoRAs.
+
+    Matches ``scaling * x @ qlora.delta_w().T`` (B column-grouped tensors are
+    consumed as their transposed row-grouped buffers directly — zero-copy).
+    """
+    xp, t = _pad_tokens(x, min(tile_t, max(x.shape[0], 1)))
+    tt = min(tile_t, xp.shape[0])
+    h_hi, _ = _side(xp, qlora.a_high, interpret, tt)
+    y = _out_side(h_hi, qlora.b_high, interpret, tt)
+    if qlora.a_low is not None:
+        h_lo, _ = _side(xp, qlora.a_low, interpret, tt)
+        y = y + _out_side(h_lo, qlora.b_low, interpret, tt)
+    return (scaling * y[:t]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SGMV — batched heterogeneous adapters
+# --------------------------------------------------------------------------
+
+def stack_adapter_side(qs: Sequence[QuantizedTensor]):
+    """Stack per-adapter QuantizedTensors (same shape/config) into the
+    (NA, R, ·) kernel layout."""
+    parts = [_kernel_layout(q) for q in qs]
+    codes = jnp.stack([p[0] for p in parts])
+    scale = jnp.stack([p[1] for p in parts])
+    zero = jnp.stack([p[2] for p in parts])
+    return codes, scale, zero
+
+
+def sgmv_apply(
+    x: jax.Array,                    # (T, K), segment-sorted rows
+    qas: Sequence[QuantizedTensor],  # per-adapter A (R, K)
+    qbts: Sequence[QuantizedTensor],  # per-adapter Bᵀ-view (R, M)
+    seg_map: jax.Array,              # (T // tile_t,) adapter id per tile
+    *,
+    scaling: float = 1.0,
+    tile_t: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Heterogeneous multi-LoRA apply; host buckets requests so each token
+    tile is single-adapter (pad segments to tile_t)."""
+    from .kernel import sgmv_out
+
+    a_codes, a_scale, a_zero = stack_adapter_side(qas)
+    h = sgmv_rhs(x, a_codes, a_scale, a_zero, seg_map,
+                 bits=qas[0].bits, binary=qas[0].mode == "binary",
+                 tile_t=tile_t, interpret=interpret)
+    b_codes, b_scale, b_zero = stack_adapter_side(qbts)
+    y = sgmv_out(h, b_codes, b_scale, b_zero, seg_map,
+                 bits=qbts[0].bits, binary=qbts[0].mode == "binary",
+                 tile_t=tile_t, interpret=interpret)
+    return (scaling * y).astype(x.dtype)

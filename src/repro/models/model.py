@@ -1,0 +1,451 @@
+"""Decoder-LM assembly: heterogeneous layer groups scanned with stacked
+params, LoRA trees mirroring every targeted linear, and three execution
+modes (train loss / prefill / decode-with-cache).
+
+Design notes
+------------
+* **scan-over-layers**: each ``BlockSpec`` group stacks its parameters with a
+  leading ``(count, ...)`` axis and runs under ``jax.lax.scan``. This keeps
+  the HLO size O(#groups), not O(#layers) — essential for compiling 61-80
+  layer configs against a 512-device mesh.
+* **params = {"base", "lora"}**: the frozen base and the trainable adapters
+  are separate trees with identical layer structure. ``train_step`` takes
+  gradients only w.r.t. ``lora`` (QLoRA-style training, as in the paper).
+* **caches/states** are pytrees stacked per group, sliced by the same scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import recurrent as rec_mod
+from .common import (
+    LoRASpec,
+    apply_norm,
+    embed,
+    init_embedding,
+    init_norm,
+    softcap,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# per-sub-block init / apply dispatch
+# --------------------------------------------------------------------------
+
+def _init_mixer(key, cfg, kind: str, lora_spec):
+    if kind in ("attn", "local_attn"):
+        return attn_mod.init_gqa(key, cfg, lora_spec)
+    if kind == "mla":
+        return attn_mod.init_mla(key, cfg, lora_spec)
+    if kind == "rglru":
+        return rec_mod.init_rglru(key, cfg, lora_spec)
+    if kind == "rwkv":
+        return rec_mod.init_rwkv_tmix(key, cfg, lora_spec)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, cfg, kind: str, lora_spec):
+    if kind == "dense":
+        return ffn_mod.init_dense_ffn(key, cfg, lora_spec)
+    if kind == "moe":
+        return ffn_mod.init_moe(key, cfg, lora_spec)
+    if kind == "rwkv_cm":
+        return rec_mod.init_rwkv_cmix(key, cfg, lora_spec)
+    if kind == "none":
+        return {}, None
+    raise ValueError(kind)
+
+
+def _mixer_cache(cfg, kind: str, batch: int, capacity: int, dtype):
+    if kind == "attn":
+        return attn_mod.init_gqa_cache(cfg, batch, capacity, dtype)
+    if kind == "local_attn":
+        cap = min(capacity, cfg.window)
+        return attn_mod.init_gqa_cache(cfg, batch, cap, dtype)
+    if kind == "mla":
+        return attn_mod.init_mla_cache(cfg, batch, capacity, dtype)
+    if kind == "rglru":
+        return rec_mod.init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        return rec_mod.init_rwkv_state(cfg, batch)["tmix"]
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    # rematerialize each scanned layer's activations on the backward pass
+    # (train memory: store only layer-boundary activations)
+    remat: bool = False
+    # concrete Mesh: enables with_sharding_constraint hints (MoE dispatch
+    # buffers, layer-boundary activations) for SPMD propagation at scale
+    mesh: Any = None
+    # unroll layer scans (cost-model compiles only: XLA's HloCostAnalysis
+    # counts a while body once, so roofline mini-compiles unroll)
+    unroll: bool = False
+    # cost-model overrides: mirror the production algorithm choice when
+    # lowering scaled-down mini programs (see launch/dryrun.py)
+    force_blockwise: Any = None
+    kv_chunk: int = 1024
+    rwkv_chunk: int = 64
+
+    def _constrain_act(self, x, seq_shard=False):
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        fsdp = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+        if not fsdp:
+            return x
+        size = int(np.prod([self.mesh.shape[a] for a in fsdp]))
+        if x.shape[0] % size != 0:
+            return x
+        spec = [fsdp] + [None] * (x.ndim - 1)
+        if (seq_shard and x.ndim >= 3 and "model" in self.mesh.axis_names
+                and x.shape[1] % self.mesh.shape["model"] == 0
+                and x.shape[1] > self.mesh.shape["model"]):
+            spec[1] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    # ----- init -----
+
+    def lora_spec(self) -> LoRASpec:
+        return LoRASpec(rank=self.cfg.lora_rank, alpha=self.cfg.lora_alpha,
+                        dtype=self.cfg.lora_dtype)
+
+    @property
+    def scaling(self) -> float:
+        return self.cfg.lora_alpha / self.cfg.lora_rank
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        spec = self.lora_spec()
+        k_embed, k_head, k_groups, k_mtp = jax.random.split(key, 4)
+
+        if cfg.n_codebooks:
+            kk = jax.random.split(k_embed, cfg.n_codebooks)
+            embed_p = jax.vmap(
+                lambda k: init_embedding(k, cfg.vocab, cfg.d_model, cfg.dtype)
+            )(kk)
+        else:
+            embed_p = init_embedding(k_embed, cfg.vocab, cfg.d_model, cfg.dtype)
+
+        # tied tables serve as the unembedding too → vocab-sharded;
+        # untied input tables shard d (vocab-dim gather otherwise makes the
+        # SPMD partitioner materialize a replicated fp32 copy of the table)
+        embed_key = "embed_tied" if cfg.tie_embeddings else "embed"
+        base: Params = {embed_key: embed_p,
+                        "final_norm": init_norm(cfg.d_model, cfg.norm)}
+        lora: Params = {"groups": []}
+        if not cfg.tie_embeddings:
+            if cfg.n_codebooks:
+                kk = jax.random.split(k_head, cfg.n_codebooks)
+                base["head"] = jax.vmap(
+                    lambda k: init_embedding(k, cfg.vocab, cfg.d_model, cfg.dtype)
+                )(kk)
+            else:
+                base["head"] = init_embedding(k_head, cfg.vocab, cfg.d_model, cfg.dtype)
+        if cfg.mtp:
+            from .common import init_linear
+
+            base["mtp"] = {
+                "norm": init_norm(cfg.d_model, cfg.norm),
+                "proj": init_linear(k_mtp, 2 * cfg.d_model, cfg.d_model, cfg.dtype),
+            }
+
+        base["groups"] = []
+        gkeys = jax.random.split(k_groups, len(cfg.blocks))
+        for spec_i, (block, gk) in enumerate(zip(cfg.blocks, gkeys)):
+            def init_one_layer(lk):
+                subs_b: Params = {}
+                subs_l: Params = {}
+                sks = jax.random.split(lk, 2 * len(block.pattern))
+                for j, (mk, fk) in enumerate(zip(block.pattern, block.ffn)):
+                    mb, ml = _init_mixer(sks[2 * j], self.cfg, mk, spec)
+                    fb, fl = _init_ffn(sks[2 * j + 1], self.cfg, fk, spec)
+                    sub_b = {
+                        "mixer": mb,
+                        "mixer_norm": init_norm(self.cfg.d_model, self.cfg.norm),
+                        "ffn": fb,
+                        "ffn_norm": init_norm(self.cfg.d_model, self.cfg.norm),
+                    }
+                    if self.cfg.post_norm:
+                        sub_b["post_mixer_norm"] = init_norm(self.cfg.d_model, self.cfg.norm)
+                        sub_b["post_ffn_norm"] = init_norm(self.cfg.d_model, self.cfg.norm)
+                    subs_b[f"sub_{j}"] = sub_b
+                    subs_l[f"sub_{j}"] = {"mixer": ml, "ffn": fl}
+                return subs_b, subs_l
+
+            lkeys = jax.random.split(gk, block.count)
+            gb, gl = jax.vmap(init_one_layer)(lkeys)
+            base["groups"].append(gb)
+            lora["groups"].append(gl)
+
+        return {"base": base, "lora": lora}
+
+    # ----- caches -----
+
+    def init_cache(self, batch: int, capacity: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for block in cfg.blocks:
+            sub = {}
+            for j, mk in enumerate(block.pattern):
+                one = _mixer_cache(cfg, mk, batch, capacity, cfg.dtype)
+                if block.ffn[j] == "rwkv_cm":
+                    one = {"tmix": one,
+                           "cmix": {"x_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.dtype)}}
+                sub[f"sub_{j}"] = jax.tree_util.tree_map(
+                    lambda z: jnp.broadcast_to(z, (block.count,) + z.shape), one
+                )
+            caches.append(sub)
+        return caches
+
+    # ----- sub-block forward -----
+
+    def _run_mixer(self, kind, x, bparams, lparams, *, positions, cache, cache_pos):
+        cfg = self.cfg
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else None
+            return attn_mod.gqa_attention(
+                x, bparams, lparams, cfg, positions=positions, window=window,
+                cache=cache, cache_pos=cache_pos, scaling=self.scaling,
+                unroll=self.unroll, force_blockwise=self.force_blockwise,
+                kv_chunk=self.kv_chunk)
+        if kind == "mla":
+            return attn_mod.mla_attention(
+                x, bparams, lparams, cfg, positions=positions,
+                cache=cache, cache_pos=cache_pos, scaling=self.scaling,
+                unroll=self.unroll, force_blockwise=self.force_blockwise,
+                kv_chunk=self.kv_chunk)
+        if kind == "rglru":
+            return rec_mod.rglru_block(
+                x, bparams, lparams, cfg, state=cache, scaling=self.scaling)
+        if kind == "rwkv":
+            return rec_mod.rwkv_tmix(
+                x, bparams, lparams, cfg, state=cache, scaling=self.scaling,
+                unroll=self.unroll, chunk=self.rwkv_chunk)
+        raise ValueError(kind)
+
+    def _run_ffn(self, kind, x, bparams, lparams, *, state):
+        if kind == "dense":
+            act = "gelu" if self.cfg.norm == "rmsnorm_plus1" else "silu"
+            return ffn_mod.dense_ffn(x, bparams, lparams, activation=act,
+                                     scaling=self.scaling), 0.0, state
+        if kind == "moe":
+            y, aux = ffn_mod.moe_ffn(x, bparams, lparams, self.cfg,
+                                     scaling=self.scaling, mesh=self.mesh)
+            return y, aux, state
+        if kind == "rwkv_cm":
+            y, new_state = rec_mod.rwkv_cmix(x, bparams, lparams, self.cfg,
+                                             state=state, scaling=self.scaling)
+            return y, 0.0, new_state
+        if kind == "none":
+            return jnp.zeros_like(x), 0.0, state
+        raise ValueError(kind)
+
+    # ----- backbone -----
+
+    def _backbone(self, params, x, positions, caches, cache_pos):
+        """Run all layer groups. ``caches`` is None (sequence mode) or the
+        stacked cache list (decode / stateful mode)."""
+        cfg = self.cfg
+        base, lora = params["base"], params["lora"]
+        aux_total = 0.0
+        new_caches = [] if caches is not None else None
+        x = self._constrain_act(x)
+
+        for gi, block in enumerate(cfg.blocks):
+            gb, gl = base["groups"][gi], lora["groups"][gi]
+            gcache = caches[gi] if caches is not None else None
+
+            def body(carry, layer):
+                h, aux = carry
+                lb, ll, lc = layer
+                new_lc = {} if lc is not None else None
+                for j, (mk, fk) in enumerate(zip(block.pattern, block.ffn)):
+                    sb, sl = lb[f"sub_{j}"], ll[f"sub_{j}"]
+                    sc = lc[f"sub_{j}"] if lc is not None else None
+                    mix_cache = sc.get("tmix", sc) if isinstance(sc, dict) else sc
+                    cm_state = sc.get("cmix") if isinstance(sc, dict) and "cmix" in sc else None
+
+                    hin = apply_norm(h, sb["mixer_norm"], cfg.norm)
+                    mix_out, mc_new = self._run_mixer(
+                        mk, hin, sb["mixer"], sl["mixer"], positions=positions,
+                        cache=mix_cache, cache_pos=cache_pos)
+                    if cfg.post_norm:
+                        mix_out = apply_norm(mix_out, sb["post_mixer_norm"], cfg.norm)
+                    h = h + mix_out
+
+                    fin = apply_norm(h, sb["ffn_norm"], cfg.norm)
+                    ffn_out, aux_j, cm_new = self._run_ffn(
+                        fk, fin, sb["ffn"], sl["ffn"], state=cm_state)
+                    if cfg.post_norm:
+                        ffn_out = apply_norm(ffn_out, sb["post_ffn_norm"], cfg.norm)
+                    h = h + ffn_out
+                    if cfg.seq_shard and h.shape[1] > 1:
+                        h = self._constrain_act(h, seq_shard=True)
+                    aux = aux + aux_j
+
+                    if new_lc is not None:
+                        if cm_new is not None:
+                            new_lc[f"sub_{j}"] = {"tmix": mc_new, "cmix": cm_new}
+                        else:
+                            new_lc[f"sub_{j}"] = mc_new
+                return (h, aux), new_lc
+
+            if gcache is not None:
+                (x, aux_total), nc = jax.lax.scan(
+                    lambda c, l: body(c, (l[0], l[1], l[2])),
+                    (x, aux_total), (gb, gl, gcache), unroll=self.unroll)
+                new_caches.append(nc)
+            else:
+                fn = lambda c, l: body(c, (l[0], l[1], None))
+                if self.remat:
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), (gb, gl),
+                                                 unroll=self.unroll)
+
+        x = apply_norm(x, base["final_norm"], cfg.norm)
+        return x, aux_total, new_caches
+
+    # ----- embedding / unembedding -----
+
+    def _embed(self, base, batch):
+        cfg = self.cfg
+        table = base["embed_tied" if cfg.tie_embeddings else "embed"]
+        if cfg.n_codebooks:
+            toks = batch["tokens"]                    # (B, K, T)
+            x = sum(
+                embed(toks[:, k], jax.tree_util.tree_map(lambda e: e[k], table))
+                for k in range(cfg.n_codebooks)
+            )
+        else:
+            x = embed(batch["tokens"], table)
+        if cfg.vision_stub and "vision_embeds" in batch:
+            x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+        if cfg.norm == "rmsnorm_plus1":               # gemma-family embed scale
+            x = x * np.sqrt(cfg.d_model)
+        # reshard the gather output to batch-sharded/full-d immediately —
+        # leaving it d-sharded trips SPMD dynamic-slice bugs downstream
+        return self._constrain_act(x.astype(cfg.dtype))
+
+    def _logits(self, base, x):
+        cfg = self.cfg
+        head = base["embed_tied"] if cfg.tie_embeddings else base["head"]
+        if cfg.n_codebooks:
+            logits = jnp.stack(
+                [unembed(x, jax.tree_util.tree_map(lambda e: e[k], head))
+                 for k in range(cfg.n_codebooks)], axis=1)  # (B, K, T, V)
+        else:
+            logits = unembed(x, head)
+        return softcap(logits, cfg.logit_softcap)
+
+    def _positions(self, batch, t: int, b: int, offset=0):
+        cfg = self.cfg
+        if "positions" in batch:
+            return batch["positions"]
+        pos = jnp.arange(t)[None, :] + offset          # (1, T) broadcasts over B
+        pos = jnp.broadcast_to(pos, (b, t))
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, t))  # text: all streams equal
+        return pos
+
+    # ----- public API -----
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Sequence mode: full causal forward. Returns (logits, aux_loss)."""
+        x = self._embed(params["base"], batch)
+        b, t = x.shape[0], x.shape[1]
+        positions = self._positions(batch, t, b)
+        x, aux, _ = self._backbone(params, x, positions, None, None)
+        return self._logits(params["base"], x), aux
+
+    @staticmethod
+    def _ce(logits, targets):
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(targets, 0)[..., None],
+            axis=-1)[..., 0]
+        mask = (targets >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def train_loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = self._embed(params["base"], batch)
+        b, t = x.shape[0], x.shape[1]
+        positions = self._positions(batch, t, b)
+        h, aux, _ = self._backbone(params, x, positions, None, None)
+        logits = self._logits(params["base"], h)
+        targets = batch["targets"]
+        if cfg.vision_stub and "vision_embeds" in batch:
+            tv = batch["vision_embeds"].shape[1]
+            logits = logits[:, tv:]
+            h = h[:, tv:]
+            x = x[:, tv:]
+        ce = self._ce(logits, targets)
+        loss = ce + aux
+
+        if cfg.mtp:
+            # multi-token prediction (deepseek): predict t+2 from the shared
+            # trunk output h_t combined with the embedding of token t+1.
+            # Simplified single-projection MTP module (DESIGN.md §4).
+            nxt = jnp.concatenate([x[:, 1:], jnp.zeros_like(x[:, :1])], axis=1)
+            mtp_in = jnp.concatenate([h, nxt], axis=-1)
+            h2 = mtp_in @ params["base"]["mtp"]["proj"]["w"]
+            h2 = apply_norm(h2, params["base"]["mtp"]["norm"], cfg.norm)
+            logits2 = self._logits(params["base"], h2)
+            t2 = jnp.concatenate(
+                [targets[:, 1:], -jnp.ones_like(targets[:, :1])], axis=-1)
+            loss = loss + 0.3 * self._ce(logits2, t2)
+
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, capacity: int):
+        """Sequence forward that also fills decode caches (attention k/v
+        ring buffers, recurrent states). Returns (logits, caches)."""
+        cfg = self.cfg
+        x = self._embed(params["base"], batch)
+        b, t = x.shape[0], x.shape[1]
+        positions = self._positions(batch, t, b)
+        caches = self.init_cache(b, capacity)
+        h, _, new_caches = self._backbone(params, x, positions, caches, 0)
+        return self._logits(params["base"], h), new_caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """One token per sequence. ``tokens: (B, 1)`` (or (B, K, 1) audio);
+        ``pos``: scalar int32 — absolute position. Returns (logits, caches)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        x = self._embed(params["base"], batch)
+        b = x.shape[0]
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32).reshape(1, 1, 1), (3, b, 1))
+        else:
+            positions = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+        x, _, new_caches = self._backbone(params, x, positions, caches, pos)
+        return self._logits(params["base"], x), new_caches
+
+
+def build_model(cfg, remat: bool = False, mesh=None, unroll: bool = False,
+                **overrides) -> Model:
+    return Model(cfg, remat=remat, mesh=mesh, unroll=unroll, **overrides)

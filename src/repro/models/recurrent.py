@@ -1,0 +1,382 @@
+"""Recurrent token mixers: RWKV-6 "Finch" time-mix/channel-mix and the
+RG-LRU block of RecurrentGemma/Griffin.
+
+Both are linear recurrences and carry O(1) decode state — these are the
+architectures that make the ``long_500k`` cell feasible.
+
+* RWKV-6 time-mix holds a matrix-valued state ``S: (H, dk, dv)`` per layer:
+      S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+  with data-dependent decay ``w_t`` (the Finch contribution). Sequence mode
+  uses a **chunked scan**: within a chunk the contribution of earlier
+  in-chunk tokens is computed by a masked attention-like einsum with decay
+  products; across chunks a ``lax.scan`` carries the state. This turns a
+  T-step sequential scan into T/C steps of MXU-friendly batched matmuls.
+
+* RG-LRU is a diagonal gated linear recurrence:
+      h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+  evaluated in parallel over time with ``jax.lax.associative_scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import LoRASpec, init_linear, init_lora, linear
+
+Params = Dict[str, Any]
+
+RWKV_LORA_DIM = 32      # ddlerp bottleneck
+RWKV_DECAY_DIM = 64
+
+
+# ==========================================================================
+# RWKV-6
+# ==========================================================================
+
+def init_rwkv_tmix(key, cfg, lora_spec: Optional[LoRASpec]):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    base = {
+        "mu_base": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.full((5, d), 0.5, jnp.float32),          # r,k,v,w,g lerp
+        "ddlerp_w1": init_linear(ks[0], d, 5 * RWKV_LORA_DIM, jnp.float32),
+        "ddlerp_w2": jax.random.normal(ks[1], (5, RWKV_LORA_DIM, d), jnp.float32) * 0.01,
+        "decay_base": jnp.asarray(
+            np.linspace(-6.0, -0.5, d, dtype=np.float32)),  # w0 per channel
+        "decay_w1": init_linear(ks[2], d, RWKV_DECAY_DIM, jnp.float32),
+        "decay_w2": init_linear(ks[3], RWKV_DECAY_DIM, d, jnp.float32),
+        "bonus": jnp.zeros((h, cfg.rwkv_head_dim), jnp.float32),  # u
+        "wr": init_linear(ks[4], d, d, cfg.dtype),
+        "wk": init_linear(ks[5], d, d, cfg.dtype),
+        "wv": init_linear(ks[6], d, d, cfg.dtype),
+        "wg": init_linear(ks[7], d, d, cfg.dtype),
+        "wo": init_linear(ks[8], d, d, cfg.dtype),
+        "gn_w": jnp.ones((d,), jnp.float32),
+        "gn_b": jnp.zeros((d,), jnp.float32),
+    }
+    lora = None
+    if lora_spec is not None:
+        kk = jax.random.split(ks[9], 5)
+        lora = {
+            name: init_lora(kk[i], d, d, lora_spec)
+            for i, name in enumerate(("wr", "wk", "wv", "wg", "wo"))
+        }
+    return base, lora
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x_{t-1} with the step before the sequence supplied by ``prev``
+    (zeros at t=0 in sequence mode, carried state in decode)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_projections(x, base, lora, scaling, x_prev):
+    """Compute r,k,v,g,decay for a (B,T,d) slab."""
+    xf = x.astype(jnp.float32)
+    sx = _token_shift(xf, x_prev) - xf
+    xxx = xf + sx * base["mu_base"]
+    mix = jnp.tanh(xxx @ base["ddlerp_w1"]["w"])
+    b, t, _ = x.shape
+    mix = mix.reshape(b, t, 5, RWKV_LORA_DIM)
+    adj = jnp.einsum("btfk,fkd->btfd", mix, base["ddlerp_w2"])
+    mus = base["mu"][None, None] + adj                     # (B,T,5,d)
+    xr, xk, xv, xw, xg = [xf + sx * mus[:, :, i] for i in range(5)]
+
+    r = linear(xr.astype(x.dtype), base["wr"], lora and lora.get("wr"), scaling)
+    k = linear(xk.astype(x.dtype), base["wk"], lora and lora.get("wk"), scaling)
+    v = linear(xv.astype(x.dtype), base["wv"], lora and lora.get("wv"), scaling)
+    g = jax.nn.silu(linear(xg.astype(x.dtype), base["wg"], lora and lora.get("wg"), scaling))
+    decay = base["decay_base"] + jnp.tanh(xw @ base["decay_w1"]["w"]) @ base["decay_w2"]["w"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)))       # (B,T,d) in (0,1)
+    return r, k, v, g, w
+
+
+def _rwkv_heads(z, h, dh):
+    b, t, _ = z.shape
+    return z.reshape(b, t, h, dh)
+
+
+def rwkv_tmix(
+    x: jax.Array,
+    base: Params,
+    lora: Optional[Params],
+    cfg,
+    *,
+    state: Optional[Params] = None,   # {"x_prev": (B,1,d), "s": (B,H,dk,dv)}
+    chunk: int = 64,
+    scaling: float = 2.0,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    b, t, _ = x.shape
+    x_prev = state["x_prev"] if state is not None else None
+    r, k, v, g, w = _rwkv_projections(x, base, lora, scaling, x_prev)
+    r = _rwkv_heads(r.astype(jnp.float32), h, dh)
+    k = _rwkv_heads(k.astype(jnp.float32), h, dh)
+    v = _rwkv_heads(v.astype(jnp.float32), h, dh)
+    w = _rwkv_heads(w, h, dh)                              # (B,T,H,dh)
+    u = base["bonus"]                                      # (H, dh)
+
+    s0 = (state["s"] if state is not None
+          else jnp.zeros((b, h, dh, dh), jnp.float32))
+
+    if t == 1:
+        # decode: one recurrence step
+        st = s0
+        out = jnp.einsum("bhk,bhkv->bhv", r[:, 0], st + u[None, :, :, None] * jnp.einsum(
+            "bhk,bhv->bhkv", k[:, 0], v[:, 0]))
+        s1 = w[:, 0][..., None] * st + jnp.einsum("bhk,bhv->bhkv", k[:, 0], v[:, 0])
+        y = out[:, None]                                   # (B,1,H,dh)
+        new_state = {"x_prev": x[:, -1:], "s": s1}
+    else:
+        # chunked sequence mode
+        c = min(chunk, t)
+        if t % c:
+            raise ValueError(f"seq len {t} must be divisible by chunk {c}")
+        nc = t // c
+
+        def resh(z):
+            return z.reshape(b, nc, c, h, dh).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,dh)
+
+        rs, ks, vs, ws = map(resh, (r, k, v, w))
+        logw = jnp.log(jnp.clip(ws, 1e-12, 1.0))
+
+        sub = 16 if c % 16 == 0 else c                 # diagonal tile size
+        nsub = c // sub
+
+        def chunk_step(s, inp):
+            rc, kc, vc, lw = inp                           # (B,H,c,dh)...
+            cum = jnp.cumsum(lw, axis=2)                   # inclusive decay logs
+            cumx = jnp.pad(cum, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+            dec_to_end = jnp.exp(cum[:, :, -1:] - cum)     # Π_{j>i} w_j
+            # inter-chunk: r_i · exp(cumx_i) · S
+            y_inter = jnp.einsum("bhik,bhkv->bhiv", rc * jnp.exp(cumx), s)
+
+            # intra-chunk pairwise coefficient exp(cumx_i − cum_j), j < i.
+            # A joint (c,c,dh) decay tensor chokes the SPMD partitioner
+            # (30+ min compiles at 512 devices) and a naive factorization
+            # r_i·exp(cumx_i) × k_j·exp(−cum_j) overflows for strong decay.
+            # EXACT block factorization instead: for query block I with
+            # boundary offset m_I = cumx[I·sub], both factors
+            #   exp(cumx_i − m_I) ≤ 1   (i in block I)
+            #   exp(m_I − cum_j) ≤ 1    (j before block I)
+            # are bounded, and their product is the exact coefficient.
+            # Within-block pairs use small (sub, sub, dh) diagonal tiles.
+            bq, hq = rc.shape[0], rc.shape[1]
+            m = cumx[:, :, ::sub]                          # (B,H,nsub,dh)
+            rb = rc.reshape(bq, hq, nsub, sub, dh)
+            cumxb = cumx.reshape(bq, hq, nsub, sub, dh)
+            cumb = cum.reshape(bq, hq, nsub, sub, dh)
+            r2 = rb * jnp.exp(cumxb - m[:, :, :, None])    # (B,H,nsub,sub,dh)
+            k2 = kc[:, :, None] * jnp.exp(
+                jnp.minimum(m[:, :, :, None] - cum[:, :, None], 0.0))
+            att_off = jnp.einsum("bhnik,bhnjk->bhnij", r2, k2)  # (B,H,nsub,sub,c)
+            ci = jnp.arange(c)
+            blk_start = (jnp.arange(nsub) * sub)[:, None, None]
+            off_mask = ci[None, None, :] < blk_start       # j strictly before block
+            att_off = jnp.where(off_mask[None, None], att_off, 0.0)
+            y_off = jnp.einsum("bhnij,bhjv->bhniv", att_off, vc)
+
+            # diagonal tiles: exact within-block decays (small 5-D)
+            dmat = jnp.exp(cumxb[:, :, :, :, None] - cumb[:, :, :, None])
+            si = jnp.arange(sub)
+            strict = si[None, :] < si[:, None]             # j < i within block
+            att_diag = jnp.einsum("bhnik,bhnijk,bhnjk->bhnij", rb, jnp.where(
+                strict[None, None, None, :, :, None], dmat, 0.0),
+                kc.reshape(bq, hq, nsub, sub, dh))
+            y_diag = jnp.einsum("bhnij,bhnjv->bhniv",
+                                att_diag, vc.reshape(bq, hq, nsub, sub, dh))
+
+            att_self = jnp.einsum("bhik,hk,bhik->bhi", rc, u, kc)
+            y_intra = ((y_off + y_diag).reshape(bq, hq, c, dh)
+                       + att_self[..., None] * vc)
+            # state update to end of chunk
+            s_new = jnp.exp(cum[:, :, -1])[..., None] * s + jnp.einsum(
+                "bhik,bhiv->bhkv", kc * dec_to_end, vc)
+            return s_new, y_inter + y_intra
+
+        s_final, ys = jax.lax.scan(chunk_step, s0, (rs, ks, vs, logw), unroll=unroll)
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, dh)
+        new_state = {"x_prev": x[:, -1:], "s": s_final} if state is not None else None
+
+    # per-head groupnorm, then gate and output projection
+    yf = y.reshape(b, -1, h, dh)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(b, -1, d) * base["gn_w"] + base["gn_b"]
+    out = linear((yf * g.astype(jnp.float32)).astype(x.dtype), base["wo"],
+                 lora and lora.get("wo"), scaling)
+    return out, new_state
+
+
+def init_rwkv_cmix(key, cfg, lora_spec: Optional[LoRASpec]):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    base = {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": init_linear(ks[0], d, f, cfg.dtype),
+        "wv": init_linear(ks[1], f, d, cfg.dtype),
+        "wr": init_linear(ks[2], d, d, cfg.dtype),
+    }
+    lora = None
+    if lora_spec is not None:
+        lora = {
+            "wk": init_lora(ks[3], d, f, lora_spec),
+            "wv": init_lora(ks[4], f, d, lora_spec),
+            "wr": init_lora(ks[5], d, d, lora_spec),
+        }
+    return base, lora
+
+
+def rwkv_cmix(
+    x: jax.Array,
+    base: Params,
+    lora: Optional[Params],
+    cfg,
+    *,
+    state: Optional[Params] = None,   # {"x_prev": (B,1,d)}
+    scaling: float = 2.0,
+) -> Tuple[jax.Array, Optional[Params]]:
+    xf = x.astype(jnp.float32)
+    prev = state["x_prev"] if state is not None else None
+    sx = _token_shift(xf, prev) - xf
+    xk = (xf + sx * base["mu_k"]).astype(x.dtype)
+    xr = (xf + sx * base["mu_r"]).astype(x.dtype)
+    k = linear(xk, base["wk"], lora and lora.get("wk"), scaling)
+    k = jnp.square(jax.nn.relu(k))
+    kv = linear(k, base["wv"], lora and lora.get("wv"), scaling)
+    r = jax.nn.sigmoid(linear(xr, base["wr"], lora and lora.get("wr"), scaling))
+    out = r * kv
+    new_state = {"x_prev": x[:, -1:]} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg, batch: int):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    return {
+        "tmix": {
+            "x_prev": jnp.zeros((batch, 1, d), cfg.dtype),
+            "s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        },
+        "cmix": {"x_prev": jnp.zeros((batch, 1, d), cfg.dtype)},
+    }
+
+
+# ==========================================================================
+# RG-LRU (RecurrentGemma / Griffin)
+# ==========================================================================
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg, lora_spec: Optional[LoRASpec]):
+    d = cfg.d_model
+    width = cfg.rglru_width or d
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 10)
+    base = {
+        "w_in": init_linear(ks[0], d, width, cfg.dtype),
+        "w_gate": init_linear(ks[1], d, width, cfg.dtype),
+        "conv_w": jax.random.normal(ks[2], (cw, width), jnp.float32) * 0.02,
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        # softplus parameter of the per-channel decay rate Λ; the linspace
+        # spreads effective decay horizons across channels (Griffin init)
+        "lambda_p": jnp.asarray(np.linspace(0.5, 4.0, width).astype(np.float32)),
+        "w_ix": init_linear(ks[3], width, width, jnp.float32),
+        "w_ax": init_linear(ks[4], width, width, jnp.float32),
+        "w_out": init_linear(ks[5], width, d, cfg.dtype),
+    }
+    lora = None
+    if lora_spec is not None:
+        lora = {
+            "w_in": init_lora(ks[6], d, width, lora_spec),
+            "w_gate": init_lora(ks[7], d, width, lora_spec),
+            "w_out": init_lora(ks[8], width, d, lora_spec),
+        }
+    return base, lora
+
+
+def _causal_conv(y, conv_w, conv_b, prev: Optional[jax.Array]):
+    """Depthwise causal conv over time; ``prev`` holds the last (cw-1) inputs
+    in decode mode."""
+    cw = conv_w.shape[0]
+    yf = y.astype(jnp.float32)
+    if prev is None:
+        pad = jnp.zeros_like(yf[:, : cw - 1])
+    else:
+        pad = prev.astype(jnp.float32)
+    ypad = jnp.concatenate([pad, yf], axis=1)
+    out = sum(ypad[:, i : i + yf.shape[1]] * conv_w[i] for i in range(cw))
+    return (out + conv_b).astype(y.dtype), ypad[:, -(cw - 1):]
+
+
+def rglru_block(
+    x: jax.Array,
+    base: Params,
+    lora: Optional[Params],
+    cfg,
+    *,
+    state: Optional[Params] = None,   # {"h": (B,width), "conv": (B,cw-1,width)}
+    scaling: float = 2.0,
+) -> Tuple[jax.Array, Optional[Params]]:
+    width = cfg.rglru_width or cfg.d_model
+    gate = jax.nn.gelu(linear(x, base["w_gate"], lora and lora.get("w_gate"), scaling))
+    y = linear(x, base["w_in"], lora and lora.get("w_in"), scaling)
+    y, conv_state = _causal_conv(
+        y, base["conv_w"], base["conv_b"],
+        state["conv"] if state is not None else None,
+    )
+
+    yf = y.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(yf @ base["w_ix"]["w"])
+    a_gate = jax.nn.sigmoid(yf @ base["w_ax"]["w"])
+    log_a = -RGLRU_C * jax.nn.softplus(base["lambda_p"]) * a_gate   # (B,T,w)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0)) * (i_gate * yf)
+
+    h0 = state["h"] if state is not None else None
+    if y.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        if h0 is not None:
+            gated_in = gated_in.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, gated_in), axis=1)
+        new_h = hs[:, -1]
+
+    out = linear((hs * gate.astype(jnp.float32)).astype(x.dtype),
+                 base["w_out"], lora and lora.get("w_out"), scaling)
+    new_state = (
+        {"h": new_h, "conv": conv_state.astype(x.dtype)}
+        if state is not None else None
+    )
+    return out, new_state
+
+
+def init_rglru_state(cfg, batch: int):
+    width = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, width), cfg.dtype),
+    }

@@ -1,0 +1,84 @@
+"""AdamW + cosine-with-warmup schedule, matching the paper's Appendix A
+training recipe (β = [0.9, 0.95], lr 2e-4, α_f = 0.01, warmup 0.3·duration,
+grad-clip 1.0). Pure-pytree implementation (no optax dependency)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 2e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_frac: float = 0.3
+    alpha_f: float = 0.01          # final lr fraction (cosine floor)
+    total_steps: int = 1000
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def cosine_with_warmup(step, cfg: OptimizerConfig):
+    warm = max(int(cfg.warmup_frac * cfg.total_steps), 1)
+    t = jnp.asarray(step, jnp.float32)
+    warm_lr = cfg.lr * t / warm
+    prog = jnp.clip((t - warm) / max(cfg.total_steps - warm, 1), 0.0, 1.0)
+    cos_lr = cfg.lr * (cfg.alpha_f + (1 - cfg.alpha_f) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warm, warm_lr, cos_lr)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(
+    grads, opt_state: OptState, params, cfg: OptimizerConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.betas
+    step = opt_state.step + 1
+    lr = cosine_with_warmup(step, cfg)
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), opt_state.mu, grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        opt_state.nu, grads)
+    sf = jnp.asarray(step, jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1**sf)
+    nu_hat_scale = 1.0 / (1 - b2**sf)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,3 @@
+from .sharding import batch_specs, cache_specs, named_shardings, shard_tree, spec_for
+
+__all__ = ["batch_specs", "cache_specs", "named_shardings", "shard_tree", "spec_for"]

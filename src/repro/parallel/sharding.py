@@ -1,0 +1,213 @@
+"""Partition rules: map every parameter/activation to a PartitionSpec.
+
+Strategy (baseline; §Perf iterates on it):
+
+* mesh axes — single pod ``("data", "model")`` = (16, 16); multi-pod
+  ``("pod", "data", "model")`` = (2, 16, 16). ``FSDP`` below denotes the
+  combined batch axes ``("pod", "data")`` (or just ``("data",)``).
+* **base weights** — Megatron-style TP over ``model`` on the feature axis
+  (column-parallel in-proj, row-parallel out-proj) + FSDP over the other
+  big axis. Embedding/unembedding shard the vocab over ``model``.
+* **experts** — expert-parallel over ``model`` when n_experts divides the
+  axis (deepseek 256/16 ✓); otherwise TP *inside* each expert (mixtral 8<16).
+* **LoRA params** — B (out×r) shards its out dim over ``model``; A (r×in)
+  is ≤ d·r ≈ 0.5 MB and stays replicated. Expert-stacked LoRA follows EP.
+* **activations/batch** — sharded over FSDP axes; decode caches shard batch
+  (falling back to replication for batch-1 long-context cells).
+
+Every rule is divisibility-guarded: the first candidate spec whose sharded
+dims divide the mesh axis sizes wins, so the same rules serve the smoke
+mesh (1×1), the pod mesh, and the multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# rule table
+# --------------------------------------------------------------------------
+
+# Each entry: (path regex, [candidate spec builders]); a builder gets
+# (ndim,) and returns a PartitionSpec of that rank, already including the
+# leading scan-stack axes as None (rules are written for the *trailing*
+# dims and left-padded automatically).
+
+
+def _pad(spec: Sequence, ndim: int) -> P:
+    spec = list(spec)
+    if len(spec) > ndim:
+        # drop leading Nones if the leaf is unstacked
+        spec = spec[len(spec) - ndim:]
+    return P(*([None] * (ndim - len(spec)) + spec))
+
+
+FSDP = "__fsdp__"   # placeholder resolved to ("pod","data") or ("data",)
+
+
+_RULES: Tuple[Tuple[str, Tuple[Tuple[Any, ...], ...]], ...] = (
+    # unembedding (and tied tables): vocab over model — logits stay sharded
+    (r"\['(head|embed_tied)'\]\['e'\]$", (("model", None), (None, None))),
+    # input-only embedding: d over model — a vocab-sharded table makes the
+    # token-gather materialize a replicated fp32 copy (measured 22 GB on
+    # the deepseek cell); d-sharded gathers partition trivially
+    (r"\['embed'\]\['e'\]$", (("model", None), (None, None))),
+    # routers stay replicated (tiny, fp32)
+    (r"router", ((None, None),)),
+    # expert stacks (E, in, out) — must match the shard_map MoE in_specs:
+    # EP × f-TP when E divides the FSDP axes (deepseek 256), else
+    # weight-FSDP × f-TP (mixtral 8 experts, ZeRO-3-gathered per layer)
+    (r"experts.*\['wg'\]\['w'\]|experts.*\['wu'\]\['w'\]",
+     ((FSDP, None, "model"), (None, FSDP, "model"), (None, None, "model"),
+      (None, None, None))),
+    (r"experts.*\['(wg|wu)'\]\['scale'\]",
+     ((FSDP, None, "model"), (None, None, "model"), (None, None, None))),
+    (r"experts.*\['wd'\]\['scale'\]",
+     ((FSDP, None, None), (None, None, None))),
+    (r"experts.*\['wd'\]\['w'\]",
+     ((FSDP, "model", None), (None, "model", FSDP), (None, "model", None),
+      (None, None, None))),
+    # expert LoRA: EP-sharded over E when divisible, else f-dim sharded
+    (r"experts.*\['wd'\]\['a'\]$",
+     ((FSDP, None, None), (None, None, "model"), (None, None, None))),
+    (r"experts.*\['(wg|wu)'\]\['b'\]$",
+     ((FSDP, None, None), (None, "model", None), (None, None, None))),
+    (r"experts.*\['a'\]$", ((FSDP, None, None), (None, None, None))),
+    (r"experts.*\['b'\]$", ((FSDP, None, None), (None, None, None))),
+    # attention / dense in-projections (d, out): column parallel
+    (r"\['(wq|wk|wv|wg|wu|wq_up|wk_up|wv_up|w_in|w_gate|wr)'\]\['w'\]",
+     ((FSDP, "model"), (None, "model"), (FSDP, None), (None, None))),
+    # out-projections (in, d): row parallel
+    (r"\['(wo|wd|w_out)'\]\['w'\]",
+     (("model", FSDP), ("model", None), (None, FSDP), (None, None))),
+    # MLA down-projections (d, rank): rank is small — shard d over fsdp
+    (r"\['(wq_down|wkv_down|wk_rope)'\]\['w'\]", ((FSDP, None), (None, None))),
+    # RWKV channel-mix value proj (f, d) is an out-projection
+    (r"\['wv'\]\['w'\]", (("model", FSDP), ("model", None), (None, None))),
+    # RG-LRU gate mats (width, width)
+    (r"\['(w_ix|w_ax)'\]\['w'\]", ((None, "model"), (None, None))),
+    # LoRA factors on big linears: b (out, r) over model; a replicated
+    (r"\['b'\]$", (("model", None), (None, None))),
+    (r"\['a'\]$", ((None, None),)),
+    # everything else (norms, mus, convs, decay, bonus, scalar state)
+    (r"", ((None,),)),
+)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _resolve(entry, mesh: Mesh):
+    fa = fsdp_axes(mesh)
+    if entry == FSDP:
+        return fa if len(fa) > 1 else (fa[0] if fa else None)
+    return entry
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _fits(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        if dim % _axis_size(mesh, entry) != 0:
+            return False
+    return True
+
+
+def spec_for(path: str, shape, mesh: Mesh) -> P:
+    """First divisibility-compatible candidate for this param path."""
+    ndim = len(shape)
+    for pattern, candidates in _RULES:
+        if re.search(pattern, path):
+            for cand in candidates:
+                resolved = tuple(_resolve(c, mesh) for c in cand)
+                spec = _pad(resolved, ndim)
+                if _fits(spec, shape, mesh):
+                    return spec
+            return P(*([None] * ndim))
+    return P(*([None] * ndim))
+
+
+def shard_tree(tree, mesh: Mesh):
+    """PartitionSpec tree for an arbitrary param pytree (path-based)."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        return spec_for(pstr, np.shape(leaf), mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def named_shardings(tree, mesh: Mesh):
+    specs = shard_tree(tree, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# batch / cache shardings
+# --------------------------------------------------------------------------
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Shard the leading batch dim over the FSDP axes (guarded)."""
+    fa = fsdp_axes(mesh)
+    axis = fa if len(fa) > 1 else (fa[0] if fa else None)
+
+    def one(leaf):
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        ndim = len(shape)
+        # musicgen tokens are (B, K, T); vlm positions are (3, B, T)
+        bdim = 1 if ndim == 3 and shape[0] == 3 else 0
+        spec = [None] * ndim
+        if axis is not None and shape[bdim] % _axis_size(mesh, axis) == 0:
+            spec[bdim] = axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh):
+    """Decode caches: leaves are (L, B, ...) stacked.
+
+    * B (axis 1) shards over FSDP when divisible (batch-1 long-context cells
+      fall back to replication — their per-layer state is window/state-sized).
+    * A feature dim shards over ``model``: for 5-dim GQA caches
+      (L, B, S, KV, dh) prefer the KV-head dim, falling back to dh; for
+      MLA/recurrent caches the last (latent/width) dim. This is what keeps
+      128-batch × 32k-cache cells inside 16 GB/chip (see DESIGN.md).
+    """
+    fa = fsdp_axes(mesh)
+    axis = fa if len(fa) > 1 else (fa[0] if fa else None)
+    msize = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if axis is not None and nd >= 2 and shape[1] > 1 and shape[1] % _axis_size(mesh, axis) == 0:
+            spec[1] = axis
+        if msize > 1:
+            if nd == 5:                       # (L, B, S, KV, dh)
+                if shape[3] % msize == 0 and shape[3] > 1:
+                    spec[3] = "model"
+                elif shape[4] % msize == 0:
+                    spec[4] = "model"
+            elif nd >= 3:                     # (L, B, ..., feat)
+                if shape[-1] % msize == 0 and shape[-1] >= msize:
+                    spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, cache_tree)

@@ -1,0 +1,13 @@
+from .engine import (
+    AdapterStore,
+    MultiLoRAEngine,
+    QuantizedAdapter,
+    Request,
+    dequantize_adapter,
+    quantize_adapter_tree,
+)
+
+__all__ = [
+    "AdapterStore", "MultiLoRAEngine", "QuantizedAdapter", "Request",
+    "dequantize_adapter", "quantize_adapter_tree",
+]

@@ -1,0 +1,39 @@
+import os
+
+# Keep smoke tests on the single real CPU device — the 512-device flag is
+# set ONLY by the dry-run entrypoint (see launch/dryrun.py).
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def decaying_lora(m=256, n=256, r=16, decay=0.4, seed=0):
+    """A 'trained-looking' adapter: orthogonal factors, decaying spectrum."""
+    g = np.random.default_rng(seed)
+    u = np.linalg.qr(g.normal(size=(m, r)))[0]
+    v = np.linalg.qr(g.normal(size=(n, r)))[0]
+    s = np.exp(-decay * np.arange(r))
+    b = (u * np.sqrt(s)).astype(np.float32)
+    a = (np.sqrt(s)[:, None] * v.T).astype(np.float32)
+    return jnp.asarray(b), jnp.asarray(a)
+
+
+@pytest.fixture
+def lora_pair():
+    return decaying_lora()
+
+
+def smoke_cfg(arch, **overrides):
+    from repro.configs import get_config
+
+    cfg = get_config(arch, "smoke")
+    return dataclasses.replace(cfg, dtype=jnp.float32, **overrides)

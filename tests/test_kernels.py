@@ -1,0 +1,123 @@
+"""Pallas kernel validation (interpret=True) against the pure-jnp oracle:
+shape/dtype sweeps for the fused dequant matmuls and the SGMV variants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LoRAQuantConfig, quantize_lora
+from repro.core.quant import binary_quantize, rtn_quantize
+from repro.kernels.quant_matmul.ops import (
+    _kernel_layout,
+    lora_apply_quantized,
+    sgmv_apply,
+)
+from repro.kernels.quant_matmul.kernel import matmul_out, matmul_rhs
+from repro.kernels.quant_matmul.ref import (
+    ref_lora_apply,
+    ref_quant_matmul_out,
+    ref_quant_matmul_rhs,
+    ref_sgmv,
+)
+
+SHAPES = [(16, 256, 128), (37, 512, 256), (128, 1024, 384), (8, 128, 2048)]
+
+
+def _rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.05).astype(dtype)
+
+
+@pytest.mark.parametrize("t,k,m", SHAPES)
+@pytest.mark.parametrize("mode,bits", [("rtn", 2), ("rtn", 4), ("binary", 1)])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_rhs_vs_ref(t, k, m, mode, bits, xdtype):
+    r = 16
+    a = _rand((r, k), jnp.float32, seed=bits)
+    q = (rtn_quantize(a, bits, 128, axis=1) if mode == "rtn"
+         else binary_quantize(a, 128, axis=1))
+    x = _rand((t, k), xdtype, seed=t)
+    codes, scale, zero, _ = _kernel_layout(q)
+    tp = -(-t // 8) * 8
+    xp = jnp.pad(x, ((0, tp - t), (0, 0)))
+    got = matmul_rhs(xp, codes, scale, zero, bits=q.bits,
+                     binary=(mode == "binary"), tile_t=8,
+                     tile_k=min(k, 256), interpret=True)[:t]
+    want = ref_quant_matmul_rhs(x.astype(jnp.float32), q)
+    np.testing.assert_allclose(np.asarray(got[:, :r]), np.asarray(want),
+                               rtol=2e-2 if xdtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if xdtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("t,k,m", SHAPES[:3])
+@pytest.mark.parametrize("mode", ["rtn", "binary"])
+def test_matmul_out_vs_ref(t, k, m, mode):
+    r = 16
+    bt = _rand((r, m), jnp.float32, seed=7)
+    q = (rtn_quantize(bt, 2, 128, axis=1) if mode == "rtn"
+         else binary_quantize(bt, 128, axis=1))
+    h = _rand((t, r), jnp.float32, seed=5)
+    codes, scale, zero, _ = _kernel_layout(q)
+    hp = jnp.pad(h, ((0, -(-t // 8) * 8 - t), (0, codes.shape[0] - r)))
+    got = matmul_out(hp, codes, scale, zero, bits=q.bits,
+                     binary=(mode == "binary"), tile_t=8,
+                     tile_m=128, interpret=True)[:t]
+    want = ref_quant_matmul_out(h, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("rho,bits_high", [(0.8, 2), (0.9, 2), (0.9, 3)])
+def test_lora_apply_full_pipeline(rho, bits_high):
+    rng = np.random.default_rng(0)
+    m, n, r = 384, 512, 16
+    u = np.linalg.qr(rng.normal(size=(m, r)))[0]
+    v = np.linalg.qr(rng.normal(size=(n, r)))[0]
+    s = np.exp(-0.4 * np.arange(r))
+    b = jnp.asarray((u * np.sqrt(s)).astype(np.float32))
+    a = jnp.asarray((np.sqrt(s)[:, None] * v.T).astype(np.float32))
+    ql = quantize_lora(b, a, LoRAQuantConfig(rho=rho, bits_high=bits_high,
+                                             ste_steps=0))
+    if ql.a_high.bits == 3:
+        pytest.skip("3-bit uses uint32 packing; kernel path covers 1/2/4/8")
+    x = _rand((23, n), jnp.float32, seed=9)
+    got = lora_apply_quantized(x, ql, interpret=True)
+    want = x @ ql.delta_w().T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["rtn", "binary"])
+@pytest.mark.parametrize("segs", [
+    [0, 1, 2, 1],
+    [2, 2, 0],
+    [1],
+])
+def test_sgmv_vs_ref(mode, segs):
+    rng = np.random.default_rng(1)
+    m, n, r, tile = 256, 384, 16, 8
+    qas, qbts = [], []
+    for i in range(3):
+        a = _rand((r, n), jnp.float32, seed=10 + i)
+        b = _rand((m, r), jnp.float32, seed=20 + i)
+        if mode == "rtn":
+            qas.append(rtn_quantize(a, 2, 128, axis=1))
+            qbts.append(rtn_quantize(b, 2, 128, axis=0))
+        else:
+            qas.append(binary_quantize(a, 128, axis=1))
+            qbts.append(binary_quantize(b, 128, axis=0))
+    seg_ids = np.repeat(segs, tile)
+    x = _rand((len(seg_ids), n), jnp.float32, seed=3)
+    seg_map = jnp.asarray(np.asarray(segs, np.int32))
+    got = sgmv_apply(x, qas, qbts, seg_map, tile_t=tile, interpret=True)
+    want = ref_sgmv(x, qas, qbts, seg_ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_layout_rank_padding():
+    a = _rand((3, 256), jnp.float32)   # rank 3 → padded to 8
+    q = rtn_quantize(a, 2, 128, axis=1)
+    codes, scale, zero, r = _kernel_layout(q)
+    assert codes.shape[0] == 8 and r == 3
+    assert float(jnp.abs(scale[3:]).max()) == 0.0

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode-vs-forward
+consistency — the zoo-level correctness contract."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_cfg
+from repro.configs import ARCH_IDS
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import build_model
+
+
+def _batch(cfg, seq=32, batch=2, vis=0):
+    dc = DataConfig(seq_len=seq, global_batch=batch, vocab=cfg.vocab,
+                    n_codebooks=cfg.n_codebooks,
+                    vision_tokens=vis, d_model=cfg.d_model)
+    return {k: jnp.asarray(v) for k, v in make_batch(dc, 0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = smoke_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, seq=64, vis=4 if cfg.vision_stub else 0)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert np.isfinite(float(loss))
+    logits, aux = model.forward(params, batch)
+    expect_t = 64 + (4 if cfg.vision_stub else 0)
+    if cfg.n_codebooks:
+        assert logits.shape == (2, cfg.n_codebooks, expect_t, cfg.vocab)
+    else:
+        assert logits.shape == (2, expect_t, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grads_only_on_lora(arch):
+    cfg = smoke_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, seq=64)
+    batch.pop("vision_embeds", None)
+
+    def loss_fn(lora):
+        return model.train_loss({"base": params["base"], "lora": lora}, batch)[0]
+
+    g = jax.grad(loss_fn)(params["lora"])
+    leaves = jax.tree_util.tree_leaves(g)
+    assert leaves, arch
+    gnorm = float(jnp.sqrt(sum(jnp.sum(x * x) for x in leaves)))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = smoke_cfg(arch)
+    if cfg.moe is not None:
+        # decode (1 token) has no capacity drops; align semantics for the test
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = 64
+    batch = _batch(cfg, seq=t)
+    batch.pop("vision_embeds", None)
+    toks = batch["tokens"]
+    full, _ = jax.jit(model.forward)(params, {"tokens": toks})
+    lp, caches = jax.jit(lambda p, b: model.prefill(p, b, 128))(
+        params, {"tokens": toks[..., : t - 1]})
+    ld, _ = jax.jit(model.decode_step)(
+        params, toks[..., t - 1:], caches, jnp.int32(t - 1))
+    ref = full[..., -1:, :]
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(ld - ref))) < 1e-3 * max(scale, 1.0), arch
+
+
+def test_local_attention_ring_buffer_decode():
+    """Decode past the window: ring overwrites old slots; result must match
+    a full forward with the window mask."""
+    cfg = smoke_cfg("mixtral-8x22b")
+    cfg = dataclasses.replace(
+        cfg, window=16, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = 48  # 3× the window
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (2, t)))
+    full, _ = jax.jit(model.forward)(params, {"tokens": toks})
+    # prefill 32, decode 16 more one-by-one
+    _, caches = jax.jit(lambda p, b: model.prefill(p, b, cfg.window))(
+        params, {"tokens": toks[:, :32]})
+    decode = jax.jit(model.decode_step)
+    for pos in range(32, t):
+        logits, caches = decode(params, toks[:, pos:pos + 1], caches,
+                                jnp.int32(pos))
+    err = float(jnp.max(jnp.abs(logits - full[:, -1:, :])))
+    assert err < 1e-3, err
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.common import apply_mrope, apply_rope
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    a = apply_rope(x, pos, theta=10000.0)
+    b = apply_mrope(x, pos3, sections=(4, 6, 6), theta=10000.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = smoke_cfg("gemma2-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, seq=32)
+    logits, _ = model.forward(params, batch)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.logit_softcap + 1e-3
+
+
+def test_rwkv_chunk_invariance():
+    """Chunked scan must give the same output for any chunk size."""
+    from repro.models.recurrent import init_rwkv_tmix, rwkv_tmix
+
+    cfg = smoke_cfg("rwkv6-1.6b")
+    base, lora = init_rwkv_tmix(jax.random.PRNGKey(0), cfg, None)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 64, cfg.d_model))
+                    .astype(np.float32) * 0.1)
+    y16, _ = rwkv_tmix(x, base, None, cfg, chunk=16)
+    y64, _ = rwkv_tmix(x, base, None, cfg, chunk=64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_bounded():
+    cfg = smoke_cfg("mixtral-8x22b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, seq=64)
+    loss, metrics = model.train_loss(params, batch)
+    assert float(metrics["aux"]) >= 0
+    assert float(metrics["aux"]) < 1.0  # load-balance loss sane at init

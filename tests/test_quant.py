@@ -1,0 +1,132 @@
+"""Unit + property tests for the quantization primitives (paper §3.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    QuantizedTensor,
+    binary_dequantize,
+    binary_fake_quant,
+    binary_quantize,
+    pack_codes,
+    rtn_dequantize,
+    rtn_fake_quant,
+    rtn_quantize,
+    storage_bits,
+    unpack_codes,
+)
+
+
+@given(
+    bits=st.sampled_from([1, 2, 3, 4, 8]),
+    rows=st.integers(1, 5),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(bits, rows, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=(rows, n)), jnp.int32)
+    assert (unpack_codes(pack_codes(codes, bits), bits, n) == codes).all()
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_rtn_roundtrip_error_bound(bits, axis):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    q = rtn_quantize(w, bits, group_size=128, axis=axis)
+    deq = q.dequantize()
+    assert deq.shape == w.shape
+    # RTN error per element ≤ S/2 per group; S ≤ range/(2^bits − 1)
+    groups = 64 if axis == 0 else 256
+    max_range = float(jnp.max(w) - jnp.min(w))
+    bound = max_range / (2**bits - 1) / 2 + 1e-6
+    assert float(jnp.max(jnp.abs(deq - w))) <= bound * 1.001
+
+
+def test_rtn_bits_monotone_error():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32))
+    errs = [float(jnp.linalg.norm(rtn_quantize(w, b, 128, 1).dequantize() - w))
+            for b in (2, 3, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_rtn_exact_on_grid():
+    # weights already on the quantization grid reconstruct exactly
+    w = jnp.asarray(np.tile(np.array([0.0, 1.0, 2.0, 3.0], np.float32), (4, 32)))
+    q = rtn_quantize(w, 2, 128, axis=1)
+    assert float(jnp.max(jnp.abs(q.dequantize() - w))) < 1e-6
+
+
+@given(seed=st.integers(0, 2**31 - 1), group=st.sampled_from([32, 64, 128]))
+@settings(max_examples=20, deadline=None)
+def test_binary_scale_is_frobenius_optimal(seed, group):
+    """Paper Eq. 8: S = mean|w| minimizes ‖w − S·sign(w)‖_F per group."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(4, group)).astype(np.float32))
+    q = binary_quantize(w, group, axis=1)
+    base = float(jnp.linalg.norm(q.dequantize() - w))
+    sign = jnp.sign(w) + (w == 0)
+    for mult in (0.5, 0.9, 1.1, 2.0):
+        scale = jnp.mean(jnp.abs(w), axis=1, keepdims=True) * mult
+        alt = float(jnp.linalg.norm(scale * sign - w))
+        assert base <= alt + 1e-5
+
+
+def test_binary_never_collapses_to_zero():
+    """The paper's motivation for sign-binarization over 1-bit RTN."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    deq_bin = binary_quantize(w, 128, 1).dequantize()
+    assert float(jnp.min(jnp.abs(deq_bin))) > 0
+    deq_rtn1 = rtn_quantize(w, 1, 128, 1).dequantize()
+    frac_zero_rtn = float(jnp.mean(jnp.abs(deq_rtn1) < 1e-9))
+    frac_zero_bin = float(jnp.mean(jnp.abs(deq_bin) < 1e-9))
+    assert frac_zero_bin == 0.0
+    assert frac_zero_rtn > 0.2  # 1-bit RTN collapses a large mass to 0
+
+
+def test_storage_bits_match_paper_constants():
+    """BIN = 1 + 16/128 = 1.13; RTN-2 = 2 + (16+2)/128 = 2.14 (Table 1)."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(128, 1024)).astype(np.float32))
+    qb = binary_quantize(w, 128, axis=1)
+    assert abs(storage_bits(qb) / qb.num_params() - 1.125) < 1e-9
+    q2 = rtn_quantize(w, 2, 128, axis=1)
+    assert abs(storage_bits(q2) / q2.num_params() - 2.140625) < 1e-9
+
+
+@pytest.mark.parametrize("n", [100, 127, 128, 129, 300])
+def test_group_padding_roundtrip(n):
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(8, n)).astype(np.float32))
+    q = rtn_quantize(w, 4, 128, axis=1)
+    assert q.dequantize().shape == (8, n)
+    qb = binary_quantize(w, 128, axis=1)
+    assert qb.dequantize().shape == (8, n)
+
+
+def test_fake_quant_matches_storage_path():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
+    fq = rtn_fake_quant(w, 2, 128, axis=1)
+    sq = rtn_quantize(w, 2, 128, axis=1).dequantize()
+    assert float(jnp.max(jnp.abs(fq - sq))) < 1e-6
+    fqb = binary_fake_quant(w, 128, axis=1)
+    sqb = binary_quantize(w, 128, axis=1).dequantize()
+    assert float(jnp.max(jnp.abs(fqb - sqb))) < 1e-6
+
+
+def test_quantized_tensor_is_pytree():
+    import jax
+
+    w = jnp.ones((8, 128), jnp.float32)
+    q = rtn_quantize(w, 2, 128, axis=1)
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 3  # codes, scale, zero
+    q2 = jax.tree_util.tree_map(lambda x: x, q)
+    assert isinstance(q2, QuantizedTensor)
