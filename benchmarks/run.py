@@ -1,22 +1,46 @@
 """Benchmark driver — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,fig2]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig2] [--json out.json]
 
 Prints ``name,metric=value,...`` CSV lines; ``*.check`` lines assert the
-paper's qualitative claims (PASS/FAIL).
+paper's qualitative claims (PASS/FAIL). ``--json`` additionally writes the
+parsed metrics + check outcomes to a file, so successive PRs can diff a
+perf trajectory. The kernel smoke target used by CI is:
+
+    PYTHONPATH=src python -m benchmarks.run --only kernels --json BENCH_kernels.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _parse_line(line: str):
+    """``suite.name,label,k=v,...`` → (key, {metric: value}) best-effort."""
+    parts = line.split(",")
+    key = ",".join(parts[:2]) if len(parts) >= 2 else line
+    metrics = {}
+    for p in parts[2:]:
+        if "=" in p:
+            k, v = p.split("=", 1)
+            try:
+                metrics[k] = float(v.rstrip("x%").split("(")[0])
+            except ValueError:
+                metrics[k] = v
+        else:
+            metrics[p] = True
+    return key, metrics
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset (table1,table2,fig2,fig3,fig4,fig6,kernels)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write parsed metrics + checks to this JSON file")
     args = p.parse_args(argv)
 
     from . import (
@@ -54,10 +78,30 @@ def main(argv=None):
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
 
     fails = [l for l in lines if l.endswith("FAIL")]
-    print(f"# checks: {sum(1 for l in lines if l.endswith('PASS'))} pass, "
-          f"{len(fails)} fail")
+    passes = sum(1 for l in lines if l.endswith("PASS"))
+    print(f"# checks: {passes} pass, {len(fails)} fail")
     for f in fails:
         print(f"# FAILED: {f}")
+
+    if args.json:
+        payload = {
+            "suites": wanted,
+            "metrics": {},
+            "checks": {},
+            "raw_lines": lines,
+            "pass": passes,
+            "fail": len(fails),
+        }
+        for line in lines:
+            key, metrics = _parse_line(line)
+            if ".check" in key.split(",")[0]:
+                payload["checks"][",".join(line.split(",")[:2])] = (
+                    line.endswith("PASS"))
+            else:
+                payload["metrics"][key] = metrics
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
     return 1 if fails else 0
 
 

@@ -13,7 +13,13 @@ from .quant import (
     storage_bits,
     unpack_codes,
 )
-from .svd_split import SVDReparam, select_h, split_at, svd_reparam
+from .svd_split import (
+    SVDReparam,
+    select_h,
+    split_at,
+    svd_reparam,
+    svd_reparam_stack,
+)
 from .ste import optimize_pairs
 from .loraquant import (
     LoRAQuantConfig,
@@ -22,6 +28,7 @@ from .loraquant import (
     dequantize_lora,
     quantize_adapter_set,
     quantize_lora,
+    quantize_lora_stack,
 )
 from .ablations import quantize_lora_variant
 from . import baselines
@@ -42,6 +49,7 @@ __all__ = [
     "select_h",
     "split_at",
     "svd_reparam",
+    "svd_reparam_stack",
     "optimize_pairs",
     "LoRAQuantConfig",
     "QuantizedLoRA",
@@ -49,6 +57,7 @@ __all__ = [
     "dequantize_lora",
     "quantize_adapter_set",
     "quantize_lora",
+    "quantize_lora_stack",
     "quantize_lora_variant",
     "baselines",
 ]

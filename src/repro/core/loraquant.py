@@ -34,12 +34,13 @@ from .quant import (
     storage_bits,
 )
 from .ste import optimize_pairs
-from .svd_split import select_h, split_at, svd_reparam
+from .svd_split import select_h, split_at, svd_reparam, svd_reparam_stack
 
 __all__ = [
     "LoRAQuantConfig",
     "QuantizedLoRA",
     "quantize_lora",
+    "quantize_lora_stack",
     "dequantize_lora",
     "quantize_adapter_set",
     "adapter_avg_bits",
@@ -178,6 +179,70 @@ def quantize_lora(
 
 def dequantize_lora(q: QuantizedLoRA) -> tuple[jax.Array, jax.Array]:
     return q.materialize()
+
+
+# --------------------------------------------------------------------------
+# batched (layer-stack) pipeline
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("h", "config"))
+def _quantize_split_stack(bp_stack, ap_stack, *, h: int, config: LoRAQuantConfig):
+    """Refine + storage-quantize a stack of already-SVD'd layers that share
+    the same split index ``h`` — one compiled vmap over the whole group
+    (the split shapes are static only within an equal-``h`` group)."""
+
+    def one(bp, ap):
+        r = ap.shape[0]
+        bh, ah = bp[:, :h], ap[:h, :]
+        low = None if h >= r else (bp[:, h:], ap[h:, :])
+        bh, ah, low = _refine(bh, ah, low, config)
+        qbh = rtn_quantize(bh, config.bits_high, config.group_size, axis=0)
+        qah = rtn_quantize(ah, config.bits_high, config.group_size, axis=1)
+        if low is not None:
+            qbl = binary_quantize(low[0], config.group_size, axis=0)
+            qal = binary_quantize(low[1], config.group_size, axis=1)
+        else:
+            qbl = qal = None
+        return QuantizedLoRA(
+            b_high=qbh, a_high=qah, b_low=qbl, a_low=qal,
+            h=h, rank=r, config=config,
+        )
+
+    return jax.vmap(one)(bp_stack, ap_stack)
+
+
+def quantize_lora_stack(
+    b_stack: jax.Array,              # (L, m, r)
+    a_stack: jax.Array,              # (L, r, n)
+    config: LoRAQuantConfig = LoRAQuantConfig(),
+) -> list:
+    """Batched Alg. 1 over a layer stack of same-shape ``(B, A)`` pairs.
+
+    Runs the QR-core-SVD reparameterization for all ``L`` layers in ONE
+    compiled call, picks every layer's ``h`` host-side from the singular
+    values, then refines + quantizes each equal-``h`` group of layers in one
+    compiled ``vmap`` — ``1 + #distinct(h)`` device dispatches instead of
+    ``L`` full per-layer Python pipelines. The math is identical to
+    :func:`quantize_lora` applied per layer (vmapped, not re-derived).
+
+    Returns a list of ``L`` :class:`QuantizedLoRA` in layer order.
+    """
+    L = int(b_stack.shape[0])
+    if L == 0:
+        return []
+    rep = svd_reparam_stack(jnp.asarray(b_stack), jnp.asarray(a_stack))
+    s_host = np.asarray(jax.device_get(rep.s))          # (L, r)
+    hs = [select_h(s_host[i], config.rho) for i in range(L)]
+
+    out: list = [None] * L
+    for h in sorted(set(hs)):
+        idx = np.asarray([i for i in range(L) if hs[i] == h])
+        stacked = _quantize_split_stack(
+            rep.b_prime[jnp.asarray(idx)], rep.a_prime[jnp.asarray(idx)],
+            h=h, config=config)
+        for pos, i in enumerate(idx):
+            out[int(i)] = jax.tree_util.tree_map(lambda x: x[pos], stacked)
+    return out
 
 
 def quantize_adapter_set(

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["SVDReparam", "svd_reparam", "select_h", "split_at"]
+__all__ = ["SVDReparam", "svd_reparam", "svd_reparam_stack", "select_h",
+           "split_at"]
 
 
 class SVDReparam(NamedTuple):
@@ -47,6 +48,19 @@ def svd_reparam(b: jax.Array, a: jax.Array) -> SVDReparam:
     b_prime = (qb @ uc) * sqrt_s[None, :]
     a_prime = sqrt_s[:, None] * (vct @ qa.T)
     return SVDReparam(b_prime=b_prime, a_prime=a_prime, s=s)
+
+
+@jax.jit
+def svd_reparam_stack(b_stack: jax.Array, a_stack: jax.Array) -> SVDReparam:
+    """Batched :func:`svd_reparam` over a layer stack.
+
+    ``b_stack (L, m, r)``, ``a_stack (L, r, n)`` → SVDReparam with a leading
+    ``L`` axis on every field. One compiled XLA program factorizes all L
+    adapters (the QR/SVD cores batch over the leading axis), replacing L
+    independent host dispatch chains — the throughput path for onboarding
+    whole adapters at once (see serving.engine.quantize_adapter_tree).
+    """
+    return jax.vmap(svd_reparam)(b_stack, a_stack)
 
 
 def select_h(s: jax.Array | np.ndarray, rho: float) -> int:

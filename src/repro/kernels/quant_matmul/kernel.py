@@ -11,25 +11,63 @@ so adapter bandwidth is AvgBits/16 of the fp16 path — these matmuls are
 memory-bound at decode, so bandwidth is wall-time.
 
 Layout contract (== ``repro.core.quant`` storage):
-  codes  (R, G, g/per) uint8   — ``per`` = 8/bits codes per byte, little-end
+  codes  (R, G, ceil(g/per)) uint8/uint32 — ``per`` codes per storage word
+         (8/bits for 1/2/4/8-bit in uint8; 10 for 3-bit in uint32),
+         little-endian within the word, padded per *group* to whole words
   scale  (R, G) fp32
   zero   (R, G) int32          — RTN only
-ops.py reshapes codes to (R, K/per) before the call; R is padded to the
-fp32 sublane multiple (8).
+ops.py reshapes codes to (R, G·words_per_group) before the call; R is
+padded to the fp32 sublane multiple (8).
 
-VMEM budgeting (v5e, 128-lane): token tile Tt=8..128, feature tile
-Kt=512..2048 (multiple of 128·per); worst tile set
-x(128×2048·4B) + codes(16×512) + w(16×2048×4) ≈ 1.2 MB ≪ 16 MB VMEM.
+Two kernel families:
+
+* **two-pass** (``matmul_rhs`` / ``matmul_out``, ``sgmv_rhs`` / ``sgmv_out``)
+  — the reference path: one ``pallas_call`` per factor, the rank-R
+  intermediate ``h`` round-trips through HBM between them, and ``x`` is read
+  from HBM once per sub-LoRA side. Restricted to dense uint8 packing
+  (bits ∈ {1, 2, 4, 8}) whose per-group word count is exactly g/per.
+* **fused single-pass** (``fused_lora`` / ``sgmv_fused``) — ONE
+  ``pallas_call`` per layer. Per token tile the kernel unpacks + dequants
+  A-high/A-low tiles in VMEM, accumulates ``h_hi``/``h_lo`` in fp32 VMEM
+  scratch across the K grid axis, and on the last K step dequants
+  B-high/B-low (held resident in VMEM via constant index maps) and emits
+  ``y = h_hi @ B_hi + h_lo @ B_lo`` directly — ``h`` never touches HBM and
+  ``x`` is read exactly once. The group-aware unpack
+  (``_unpack_dequant_grouped``) slices per-group word padding, so 3-bit
+  uint32 packing is supported as well.
+
+Fused-path layout/VMEM contract: K tiles must be a multiple of the A-side
+quant group (so per-tile scale blocks are exact — ops.py's ``_pick_tile``
+guarantees it); the full packed B factors (R×M/per words + (R, G_m) scales)
+and one (Tt, M) output tile stay VMEM-resident. Worst case at Tt=128,
+K tile=2048, M=8192, R=16: x(128·2048·4B) + out(128·8192·4B) + h(2·128·16·4B)
++ packed B(2·16·8192/4B) + dequant temporaries ≈ 5.5 MB ≪ 16 MB VMEM. For
+M beyond ~16k lanes, drop ``tile_t`` or fall back to the two-pass path.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# Trace-time kernel-launch accounting. Every kernel builder below records its
+# name here once per ``pallas_call`` issued (the apply wrappers in ops.py are
+# deliberately unjitted, so one logical apply == one recorded trace). Used by
+# tests and benchmarks to assert fused-vs-two-pass launch counts.
+LAUNCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def reset_launch_counts() -> None:
+    LAUNCH_COUNTS.clear()
+
+
+def _record_launch(name: str) -> None:
+    LAUNCH_COUNTS[name] += 1
 
 
 def _unpack_dequant(codes, scale, zero, bits: int):
@@ -53,6 +91,31 @@ def _unpack_dequant(codes, scale, zero, bits: int):
     z_full = jnp.broadcast_to(
         zero.astype(jnp.float32)[:, :, None], zero.shape + (g,)).reshape(r, -1)
     return s_full * (q - z_full)
+
+
+def _unpack_dequant_grouped(codes, scale, zero, bits: int, group: int):
+    """Group-aware unpack: codes (R, NG·Wg) → fp32 (R, NG·group).
+
+    ``NG`` is the number of quant groups in this tile (= scale.shape[1]) and
+    ``Wg = ceil(group/per)`` the storage words per group. Unpacking happens
+    per group and the per-group word padding is sliced off, which makes this
+    path exact for 3-bit uint32 packing (10 codes/word, 2 bits wasted) as
+    well as the dense uint8 widths.
+    """
+    per = 10 if bits == 3 else 8 // bits
+    mask = (1 << bits) - 1
+    r, c = codes.shape
+    ng = scale.shape[1]
+    wpg = c // ng
+    w = codes.reshape(r, ng, wpg).astype(jnp.int32)   # ≤30 payload bits: safe
+    planes = [(w >> (bits * i)) & mask for i in range(per)]
+    q = jnp.stack(planes, axis=-1).reshape(r, ng, wpg * per)
+    q = q[:, :, :group].astype(jnp.float32)           # drop per-group pad
+    if zero is None:                                  # binary: {0,1} → ±scale
+        deq = scale[:, :, None] * (q * 2.0 - 1.0)
+    else:
+        deq = scale[:, :, None] * (q - zero.astype(jnp.float32)[:, :, None])
+    return deq.reshape(r, ng * group)
 
 
 # --------------------------------------------------------------------------
@@ -91,6 +154,7 @@ def matmul_rhs(x, codes, scale, zero, *, bits: int, binary: bool,
     g_per_tile = scale.shape[1] // grid[1]
 
     kern = functools.partial(_matmul_rhs_kernel, bits=bits, binary=binary)
+    _record_launch("matmul_rhs")
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -131,6 +195,7 @@ def matmul_out(h, codes, scale, zero, *, bits: int, binary: bool,
     g_per_tile = scale.shape[1] // grid[1]
 
     kern = functools.partial(_matmul_out_kernel, bits=bits, binary=binary)
+    _record_launch("matmul_out")
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -182,6 +247,7 @@ def sgmv_rhs(x, codes, scale, zero, seg_map, *, bits: int, binary: bool,
         ],
         out_specs=pl.BlockSpec((tile_t, r), lambda i, seg: (i, 0)),
     )
+    _record_launch("sgmv_rhs")
     return pl.pallas_call(
         kern,
         grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
@@ -221,6 +287,7 @@ def sgmv_out(h, codes, scale, zero, seg_map, *, bits: int, binary: bool,
         ],
         out_specs=pl.BlockSpec((tile_t, m), lambda i, seg: (i, 0)),
     )
+    _record_launch("sgmv_out")
     return pl.pallas_call(
         kern,
         grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
@@ -229,7 +296,7 @@ def sgmv_out(h, codes, scale, zero, seg_map, *, bits: int, binary: bool,
     )(seg_map, h, codes, scale, zero)
 
 
-def pltpu_grid(grid_spec, num_scalar_prefetch: int):
+def pltpu_grid(grid_spec, num_scalar_prefetch: int, scratch_shapes=()):
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.PrefetchScalarGridSpec(
@@ -237,4 +304,196 @@ def pltpu_grid(grid_spec, num_scalar_prefetch: int):
         grid=grid_spec.grid,
         in_specs=grid_spec.in_specs,
         out_specs=grid_spec.out_specs,
+        scratch_shapes=tuple(scratch_shapes),
     )
+
+
+# --------------------------------------------------------------------------
+# fused single-pass apply: y = (x @ Ahiᵀ) @ Bhi + (x @ Aloᵀ) @ Blo
+# in ONE pallas_call — h_hi/h_lo live in VMEM scratch, never in HBM.
+# --------------------------------------------------------------------------
+
+QuantSide = tuple  # (codes (R, C), scale (R, G), zero (R, G))
+
+
+def fused_lora(
+    x,                               # (T, K) — T % tile_t == 0, K % tile_k == 0
+    a_hi: QuantSide, b_hi: QuantSide,
+    a_lo: Optional[QuantSide] = None, b_lo: Optional[QuantSide] = None,
+    *,
+    m: int,                          # output width (== B's M)
+    bits_hi: int, binary_hi: bool,
+    bits_lo: int = 1, binary_lo: bool = True,
+    group_ah: int, group_bh: int,
+    group_al: int = 0, group_bl: int = 0,
+    tile_t: int = 128, tile_k: int = 512,
+    interpret: bool = False,
+):
+    """Single-pass fused quantized LoRA apply (see module docstring).
+
+    Grid is (T/tile_t, K/tile_k); the K axis is innermost, so the fp32
+    ``h_hi``/``h_lo`` scratch accumulators are filled across K steps and
+    consumed on the last step, where the VMEM-resident packed B factors are
+    dequantized and the (tile_t, M) output tile is emitted.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    t, k = x.shape
+    has_low = a_lo is not None
+    r_hi = a_hi[0].shape[0]
+    r_lo = a_lo[0].shape[0] if has_low else 0
+    grid = (t // tile_t, k // tile_k)
+    nj = grid[1]
+
+    ga_tile = a_hi[1].shape[1] // nj             # A-side groups per K tile
+    wpg_ah = a_hi[0].shape[1] // a_hi[1].shape[1]
+    if has_low:
+        gal_tile = a_lo[1].shape[1] // nj
+        wpg_al = a_lo[0].shape[1] // a_lo[1].shape[1]
+
+    def kernel(*refs):
+        if has_low:
+            (x_ref, ahc, ahs, ahz, alc, als, alz,
+             bhc, bhs, bhz, blc, bls, blz, o_ref, hhi_ref, hlo_ref) = refs
+        else:
+            (x_ref, ahc, ahs, ahz, bhc, bhs, bhz, o_ref, hhi_ref) = refs
+        j = pl.program_id(1)
+        xf = x_ref[...].astype(jnp.float32)
+
+        wa = _unpack_dequant_grouped(
+            ahc[...], ahs[...], None if binary_hi else ahz[...],
+            bits_hi, group_ah)                    # (R_hi, Kt)
+        part = jnp.dot(xf, wa.T, preferred_element_type=jnp.float32)
+
+        @pl.when(j == 0)
+        def _():
+            hhi_ref[...] = part
+
+        @pl.when(j != 0)
+        def _():
+            hhi_ref[...] += part
+
+        if has_low:
+            wal = _unpack_dequant_grouped(
+                alc[...], als[...], None if binary_lo else alz[...],
+                bits_lo, group_al)                # (R_lo, Kt)
+            part_lo = jnp.dot(xf, wal.T, preferred_element_type=jnp.float32)
+
+            @pl.when(j == 0)
+            def _():
+                hlo_ref[...] = part_lo
+
+            @pl.when(j != 0)
+            def _():
+                hlo_ref[...] += part_lo
+
+        @pl.when(j == nj - 1)
+        def _():
+            wb = _unpack_dequant_grouped(
+                bhc[...], bhs[...], None if binary_hi else bhz[...],
+                bits_hi, group_bh)                # (R_hi, M)
+            acc = jnp.dot(hhi_ref[...], wb, preferred_element_type=jnp.float32)
+            if has_low:
+                wbl = _unpack_dequant_grouped(
+                    blc[...], bls[...], None if binary_lo else blz[...],
+                    bits_lo, group_bl)            # (R_lo, M)
+                acc += jnp.dot(hlo_ref[...], wbl,
+                               preferred_element_type=jnp.float32)
+            o_ref[...] = acc
+
+    def _a_specs(r, g_tile, wpg):
+        return [
+            pl.BlockSpec((r, g_tile * wpg), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_tile), lambda i, j: (0, j)),
+        ]
+
+    def _b_specs(side):
+        codes, scale, _ = side
+        r, gm = scale.shape
+        return [
+            pl.BlockSpec((r, codes.shape[1]), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, gm), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, gm), lambda i, j: (0, 0)),
+        ]
+
+    in_specs = [pl.BlockSpec((tile_t, tile_k), lambda i, j: (i, j))]
+    in_specs += _a_specs(r_hi, ga_tile, wpg_ah)
+    operands = [x, *a_hi]
+    if has_low:
+        in_specs += _a_specs(r_lo, gal_tile, wpg_al)
+        operands += [*a_lo]
+    in_specs += _b_specs(b_hi)
+    operands += [*b_hi]
+    if has_low:
+        in_specs += _b_specs(b_lo)
+        operands += [*b_lo]
+
+    scratch = [pltpu.VMEM((tile_t, r_hi), jnp.float32)]
+    if has_low:
+        scratch.append(pltpu.VMEM((tile_t, r_lo), jnp.float32))
+
+    _record_launch("fused_lora")
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_t, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+
+
+# --------------------------------------------------------------------------
+# fused SGMV: per-token-tile adapter selection AND both matmuls in one kernel
+# --------------------------------------------------------------------------
+
+def sgmv_fused(
+    x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero, seg_map, *,
+    bits_a: int, binary_a: bool, group_a: int,
+    bits_b: int, binary_b: bool, group_b: int,
+    tile_t: int = 8, interpret: bool = False,
+):
+    """Single-kernel heterogeneous multi-adapter apply.
+
+    x (T, K); a_codes (NA, R, ·); b_codes (NA, R, ·); seg_map (T/tile_t,)
+    int32 adapter id per token tile. The scalar-prefetched ``seg_map`` drives
+    the BlockSpec index maps of BOTH factor sides, so each grid step DMAs one
+    adapter's packed A and B and computes ``y = (x @ Aᵀ) @ B`` entirely in
+    VMEM — the (tile_t, R) ``h`` exists only in registers/VREGs.
+    """
+    t, k = x.shape
+    na, r, _ = a_codes.shape
+    m = b_scale.shape[2] * group_b
+    grid = (t // tile_t,)
+
+    def kernel(seg_map_ref, x_ref, ac, as_, az, bc, bs, bz, o_ref):
+        wa = _unpack_dequant_grouped(
+            ac[0], as_[0], None if binary_a else az[0], bits_a, group_a)
+        h = jnp.dot(x_ref[...].astype(jnp.float32), wa.T,
+                    preferred_element_type=jnp.float32)     # (Tt, R)
+        wb = _unpack_dequant_grouped(
+            bc[0], bs[0], None if binary_b else bz[0], bits_b, group_b)
+        o_ref[...] = jnp.dot(h, wb, preferred_element_type=jnp.float32)
+
+    grid_spec = pl.GridSpec(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, k), lambda i, seg: (i, 0)),
+            pl.BlockSpec((1, r, a_codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, a_scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, a_zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, b_codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, b_scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, b_zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, m), lambda i, seg: (i, 0)),
+    )
+    _record_launch("sgmv_fused")
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        interpret=interpret,
+    )(seg_map, x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero)

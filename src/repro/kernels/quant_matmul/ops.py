@@ -22,9 +22,30 @@ import numpy as np
 from repro.core.loraquant import QuantizedLoRA
 from repro.core.quant import QuantizedTensor
 
-from .kernel import matmul_out, matmul_rhs, sgmv_rhs
+from .kernel import fused_lora, matmul_out, matmul_rhs, sgmv_fused, sgmv_rhs
 
 SUBLANE = 8
+TILE_CAP = 2048          # max feature-tile lanes considered per kernel step
+
+
+def _pick_tile(n: int, group: int, cap: int = TILE_CAP) -> int:
+    """Largest tile ≤ cap that divides ``n`` and is a multiple of the quant
+    group size ``group`` (so per-tile scale blocks are exact).
+
+    Replaces the old ``while n % t: t //= 2`` + ``max(t, 128)`` logic, which
+    could *reinstate* a non-dividing tile after the halving loop (e.g.
+    K = 2112 with 64-wide groups: the loop lands on 64, ``max(64, 128)``
+    bumps it to 128, and 2112 % 128 != 0 silently drops the K tail).
+    """
+    if n <= cap:
+        return n
+    if group <= 0 or n % group:
+        raise ValueError(f"feature dim {n} is not a multiple of group {group}")
+    ng = n // group
+    for t in range(min(cap // group, ng), 0, -1):
+        if ng % t == 0:
+            return t * group
+    return group
 
 
 def _kernel_layout(q: QuantizedTensor, pad_r: Optional[int] = None):
@@ -61,32 +82,67 @@ def quant_matmul_rhs(x, codes, scale, zero, *, bits, binary, interpret=True,
                       tile_t=tile_t, tile_k=tile_k, interpret=interpret)
 
 
+def _check_two_pass_bits(q: QuantizedTensor):
+    if q.bits == 3:
+        raise ValueError(
+            "two-pass kernels only support dense uint8 packing (bits ∈ "
+            "{1, 2, 4, 8}); 3-bit uint32 packing needs the fused path "
+            "(fused=True, the default)")
+
+
 def _side(x, q: QuantizedTensor, interpret, tile_t):
+    _check_two_pass_bits(q)
     codes, scale, zero, r = _kernel_layout(q)
     binary = q.mode == "binary"
     k = x.shape[1]
-    tile_k = k if k <= 2048 else 2048
-    while k % tile_k:
-        tile_k //= 2
+    tile_k = _pick_tile(k, q.group_size)
     h = matmul_rhs(x, codes, scale, zero, bits=q.bits, binary=binary,
-                   tile_t=tile_t, tile_k=max(tile_k, 128) if k >= 128 else k,
-                   interpret=interpret)
+                   tile_t=tile_t, tile_k=tile_k, interpret=interpret)
     return h, r
 
 
 def _out_side(h, q: QuantizedTensor, interpret, tile_t):
+    _check_two_pass_bits(q)
     codes, scale, zero, r = _kernel_layout(q)
     if h.shape[1] != codes.shape[0]:
         h = jnp.pad(h, ((0, 0), (0, codes.shape[0] - h.shape[1])))
     binary = q.mode == "binary"
     per = 8 // q.bits
     m = codes.shape[1] * per
-    tile_m = m if m <= 2048 else 2048
-    while m % tile_m:
-        tile_m //= 2
+    tile_m = _pick_tile(m, q.group_size)
     return matmul_out(h, codes, scale, zero, bits=q.bits, binary=binary,
-                      tile_t=tile_t, tile_m=max(tile_m, 128) if m >= 128 else m,
+                      tile_t=tile_t, tile_m=tile_m,
                       interpret=interpret)
+
+
+def _fused_apply(x, qlora: QuantizedLoRA, interpret, tile_t) -> jax.Array:
+    """Single-``pallas_call`` application of both sub-LoRAs (kernel.fused_lora)."""
+    ah = qlora.a_high
+    bh = qlora.b_high
+    ahc, ahs, ahz, _ = _kernel_layout(ah)
+    bhc, bhs, bhz, _ = _kernel_layout(bh)
+    k = x.shape[1]
+    m = bh.orig_shape[0]              # B is (M, R) column-grouped
+    tile_k = _pick_tile(k, ah.group_size)
+    kwargs = dict(
+        m=m,
+        bits_hi=ah.bits, binary_hi=ah.mode == "binary",
+        group_ah=ah.group_size, group_bh=bh.group_size,
+        tile_t=tile_t, tile_k=tile_k, interpret=interpret,
+    )
+    a_lo = b_lo = None
+    if qlora.a_low is not None:
+        al, bl = qlora.a_low, qlora.b_low
+        alc, als, alz, _ = _kernel_layout(al)
+        blc, bls, blz, _ = _kernel_layout(bl)
+        if al.group_size != ah.group_size:
+            raise ValueError("fused path requires matching hi/lo A groups")
+        a_lo = (alc, als, alz)
+        b_lo = (blc, bls, blz)
+        kwargs.update(bits_lo=al.bits, binary_lo=al.mode == "binary",
+                      group_al=al.group_size, group_bl=bl.group_size)
+    return fused_lora(x, (ahc, ahs, ahz), (bhc, bhs, bhz), a_lo, b_lo,
+                      **kwargs)
 
 
 def lora_apply_quantized(
@@ -96,14 +152,24 @@ def lora_apply_quantized(
     scaling: float = 1.0,
     interpret: bool = True,
     tile_t: int = 128,
+    fused: bool = True,
 ) -> jax.Array:
-    """Fused packed-LoRA application: high (RTN) + low (binary) sub-LoRAs.
+    """Packed-LoRA application: high (RTN) + low (binary) sub-LoRAs.
 
     Matches ``scaling * x @ qlora.delta_w().T`` (B column-grouped tensors are
     consumed as their transposed row-grouped buffers directly — zero-copy).
+
+    ``fused=True`` (default) issues exactly ONE ``pallas_call``: the (T, R)
+    intermediates stay in VMEM scratch and ``x`` crosses HBM once. This path
+    also supports 3-bit uint32 packing. ``fused=False`` is the two-pass
+    reference (up to four ``pallas_call``s, ``h`` round-trips through HBM),
+    kept for A/B validation and for dense-uint8-only comparisons.
     """
     xp, t = _pad_tokens(x, min(tile_t, max(x.shape[0], 1)))
     tt = min(tile_t, xp.shape[0])
+    if fused:
+        y = _fused_apply(xp, qlora, interpret, tt)
+        return (scaling * y[:t]).astype(x.dtype)
     h_hi, _ = _side(xp, qlora.a_high, interpret, tt)
     y = _out_side(h_hi, qlora.b_high, interpret, tt)
     if qlora.a_low is not None:
@@ -135,16 +201,34 @@ def sgmv_apply(
     scaling: float = 1.0,
     tile_t: int = 8,
     interpret: bool = True,
+    fused: bool = True,
 ) -> jax.Array:
     """Heterogeneous multi-LoRA apply; host buckets requests so each token
-    tile is single-adapter (pad segments to tile_t)."""
+    tile is single-adapter (pad segments to tile_t).
+
+    ``fused=True`` (default) runs BOTH factor matmuls in a single
+    ``pallas_call`` with the scalar-prefetched segment map driving the
+    adapter gather for A and B together — the (T, R) intermediate never
+    leaves VMEM. ``fused=False`` is the two-kernel reference path.
+    """
     from .kernel import sgmv_out
 
     a_codes, a_scale, a_zero = stack_adapter_side(qas)
+    b_codes, b_scale, b_zero = stack_adapter_side(qbts)
+    if fused:
+        y = sgmv_fused(
+            x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero, seg_map,
+            bits_a=qas[0].bits, binary_a=qas[0].mode == "binary",
+            group_a=qas[0].group_size,
+            bits_b=qbts[0].bits, binary_b=qbts[0].mode == "binary",
+            group_b=qbts[0].group_size,
+            tile_t=tile_t, interpret=interpret)
+        return (scaling * y).astype(x.dtype)
+    _check_two_pass_bits(qas[0])
+    _check_two_pass_bits(qbts[0])
     h = sgmv_rhs(x, a_codes, a_scale, a_zero, seg_map,
                  bits=qas[0].bits, binary=qas[0].mode == "binary",
                  tile_t=tile_t, interpret=interpret)
-    b_codes, b_scale, b_zero = stack_adapter_side(qbts)
     y = sgmv_out(h, b_codes, b_scale, b_zero, seg_map,
                  bits=qbts[0].bits, binary=qbts[0].mode == "binary",
                  tile_t=tile_t, interpret=interpret)

@@ -153,15 +153,31 @@ def linear(
     base: Params,
     lora: Optional[Params] = None,
     scaling: float = 2.0,
+    *,
+    interpret: bool = True,
 ) -> jax.Array:
     """``x @ W (+ LoRA)``. The LoRA path computes in the LoRA dtype and is a
-    rank-r bottleneck: (x Aᵀ) Bᵀ — never materializes ΔW."""
+    rank-r bottleneck: (x Aᵀ) Bᵀ — never materializes ΔW.
+
+    ``lora`` may also be a LoRAQuant-compressed adapter leaf
+    (``repro.core.QuantizedLoRA``): the update is then computed straight
+    from the packed codes by the single-pass fused Pallas kernel — no fp
+    materialization, one ``pallas_call``."""
     y = x @ base["w"]
-    if lora is not None:
-        xl = x.astype(lora["a"].dtype)
-        upd = (xl @ lora["a"].T) @ lora["b"].T
-        y = y + (scaling * upd).astype(y.dtype)
-    return y
+    if lora is None:
+        return y
+    from repro.core.loraquant import QuantizedLoRA
+
+    if isinstance(lora, QuantizedLoRA):
+        from repro.kernels import lora_apply_quantized
+
+        x2 = x.reshape(-1, x.shape[-1])
+        upd = lora_apply_quantized(x2, lora, scaling=scaling, fused=True,
+                                   interpret=interpret)
+        return y + upd.reshape(y.shape).astype(y.dtype)
+    xl = x.astype(lora["a"].dtype)
+    upd = (xl @ lora["a"].T) @ lora["b"].T
+    return y + (scaling * upd).astype(y.dtype)
 
 
 # --------------------------------------------------------------------------

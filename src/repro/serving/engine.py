@@ -8,9 +8,16 @@ Components:
   while only the adapters actively decoding pay fp16 residency.
 * :class:`MultiLoRAEngine` — S-LoRA-style segment batching: pending requests
   are grouped by adapter id; each segment runs batched prefill + decode with
-  that adapter's LoRA tree swapped into the model params. (The fused Pallas
-  SGMV kernel in ``repro.kernels`` is the single-kernel alternative for
-  heterogeneous batches; the engine-level segmentation is the portable path.)
+  that adapter's LoRA tree swapped into the model params. (The single-pass
+  fused Pallas kernels in ``repro.kernels`` — ``lora_apply_quantized`` with
+  ``fused=True`` and the one-call ``sgmv_apply`` — are the direct-from-codes
+  alternative for heterogeneous batches; the engine-level segmentation is
+  the portable path.)
+
+Adapter onboarding is batched by default: ``quantize_adapter_tree`` feeds
+each leaf's layer stack through ``repro.core.quantize_lora_stack`` (one
+compiled SVD + one refine/quantize dispatch per distinct ``h``) instead of
+a per-layer Python loop.
 
 Requests are plain dataclasses; generation is greedy. The engine is
 synchronous by design — wrap ``engine.run()`` in your RPC layer of choice.
@@ -27,7 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LoRAQuantConfig, QuantizedLoRA, quantize_lora
+from repro.core import (
+    LoRAQuantConfig,
+    QuantizedLoRA,
+    quantize_lora,
+    quantize_lora_stack,
+)
 
 
 def iter_lora_linears(lora_tree) -> List[Tuple[str, Any]]:
@@ -71,7 +83,17 @@ class QuantizedAdapter:
         return self.total_bits() / max(self.num_params(), 1)
 
 
-def quantize_adapter_tree(lora_tree, config: LoRAQuantConfig) -> QuantizedAdapter:
+def quantize_adapter_tree(lora_tree, config: LoRAQuantConfig,
+                          batched: bool = True) -> QuantizedAdapter:
+    """Quantize every LoRA linear of an adapter tree.
+
+    ``batched=True`` (default) runs each leaf's layer stack through the
+    vmapped pipeline (``quantize_lora_stack``): one compiled SVD call plus
+    one refine+quantize call per distinct split index ``h``, instead of L
+    independent per-layer Python pipelines — the onboarding-throughput path
+    for the millions-of-uploaded-adapters scenario. ``batched=False`` keeps
+    the per-layer loop as the reference (results match to float precision).
+    """
     entries: Dict[str, List[QuantizedLoRA]] = {}
     for path, leaf in iter_lora_linears(lora_tree):
         a, b = np.asarray(leaf["a"]), np.asarray(leaf["b"])
@@ -81,10 +103,14 @@ def quantize_adapter_tree(lora_tree, config: LoRAQuantConfig) -> QuantizedAdapte
         lead = a.shape[:-2]
         a2 = a.reshape((-1,) + a.shape[-2:])
         b2 = b.reshape((-1,) + b.shape[-2:])
-        entries[path] = [
-            quantize_lora(jnp.asarray(b2[i]), jnp.asarray(a2[i]), config)
-            for i in range(a2.shape[0])
-        ]
+        if batched:
+            entries[path] = quantize_lora_stack(
+                jnp.asarray(b2), jnp.asarray(a2), config)
+        else:
+            entries[path] = [
+                quantize_lora(jnp.asarray(b2[i]), jnp.asarray(a2[i]), config)
+                for i in range(a2.shape[0])
+            ]
     template = jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                                       lora_tree)
     return QuantizedAdapter(entries=entries, template=template)
@@ -116,14 +142,17 @@ def dequantize_adapter(qa: QuantizedAdapter, like_tree) -> Any:
 class AdapterStore:
     """Quantized-at-rest adapter registry with a byte-budgeted fp LRU."""
 
-    def __init__(self, config: LoRAQuantConfig, fp_cache_bytes: int = 1 << 30):
+    def __init__(self, config: LoRAQuantConfig, fp_cache_bytes: int = 1 << 30,
+                 batched_quantize: bool = True):
         self.config = config
         self.quantized: Dict[str, QuantizedAdapter] = {}
         self.fp_cache_bytes = fp_cache_bytes
+        self.batched_quantize = batched_quantize
         self._lru: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
 
     def register(self, adapter_id: str, lora_tree) -> QuantizedAdapter:
-        qa = quantize_adapter_tree(lora_tree, self.config)
+        qa = quantize_adapter_tree(lora_tree, self.config,
+                                   batched=self.batched_quantize)
         self.quantized[adapter_id] = qa
         return qa
 

@@ -1,0 +1,80 @@
+"""Tiny stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this repo only use ``@given`` + ``@settings`` with
+``st.integers`` / ``st.floats`` / ``st.sampled_from``. This shim replays each
+test body over a deterministic pseudo-random sample of the strategy space, so
+the suite still collects and exercises the properties without the dependency
+(install ``requirements-dev.txt`` for real shrinking and edge-case coverage).
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+# Keep the replayed sample small: the real hypothesis shrinks failures and
+# caches examples; the shim is a smoke-level stand-in and must stay fast.
+_MAX_EXAMPLES_CAP = 10
+_DEFAULT_EXAMPLES = 10
+
+
+def integers(min_value: int, max_value: int):
+    return lambda rng: rng.randint(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float):
+    return lambda rng: rng.uniform(min_value, max_value)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return lambda rng: rng.choice(elements)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from,
+)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records max_examples on the decorated function (order-independent
+    with @given: the wrapper reads it at call time)."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strategy_kwargs]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            requested = getattr(
+                wrapper, "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES))
+            n = min(requested, _MAX_EXAMPLES_CAP)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: draw(rng) for k, draw in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the strategy-supplied params from pytest's fixture resolution.
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco

@@ -11,6 +11,14 @@ import numpy as np
 import pytest
 
 
+def pytest_collection_modifyitems(config, items):
+    # `-m quick` runs the suite minus the interpret-mode-slow kernel sweeps:
+    # everything not explicitly @pytest.mark.slow is auto-marked quick.
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.quick)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

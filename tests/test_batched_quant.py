@@ -1,0 +1,94 @@
+"""Batched (layer-stack) quantization pipeline vs. the per-layer loop, and
+the serving-engine onboarding path that uses it."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoRAQuantConfig,
+    quantize_lora,
+    quantize_lora_stack,
+    svd_reparam,
+    svd_reparam_stack,
+)
+from repro.serving.engine import quantize_adapter_tree
+
+
+def _stack(L=5, m=192, n=256, r=12, seed=0):
+    rng = np.random.default_rng(seed)
+    bs, as_ = [], []
+    for i in range(L):
+        u = np.linalg.qr(rng.normal(size=(m, r)))[0]
+        v = np.linalg.qr(rng.normal(size=(n, r)))[0]
+        s = np.exp(-(0.15 + 0.07 * i) * np.arange(r))   # per-layer spectra → varying h
+        bs.append((u * np.sqrt(s)).astype(np.float32))
+        as_.append((np.sqrt(s)[:, None] * v.T).astype(np.float32))
+    return jnp.asarray(np.stack(bs)), jnp.asarray(np.stack(as_))
+
+
+def test_svd_reparam_stack_matches_single():
+    b_stack, a_stack = _stack(L=3)
+    rep = svd_reparam_stack(b_stack, a_stack)
+    for i in range(3):
+        one = svd_reparam(b_stack[i], a_stack[i])
+        np.testing.assert_allclose(np.asarray(rep.s[i]), np.asarray(one.s),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(rep.b_prime[i] @ rep.a_prime[i]),
+            np.asarray(one.b_prime @ one.a_prime), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("refine,steps,tol", [
+    ("none", 0, 1e-5),
+    ("ste", 5, 1e-4),
+    ("als", 0, 1e-5),
+])
+def test_stack_matches_per_layer_loop(refine, steps, tol):
+    cfg = LoRAQuantConfig(rho=0.9, bits_high=2, ste_steps=steps, refine=refine)
+    b_stack, a_stack = _stack()
+    batched = quantize_lora_stack(b_stack, a_stack, cfg)
+    assert len(batched) == b_stack.shape[0]
+    hs = set()
+    for i, q in enumerate(batched):
+        single = quantize_lora(b_stack[i], a_stack[i], cfg)
+        assert q.h == single.h and q.rank == single.rank
+        hs.add(q.h)
+        assert q.avg_bits() == pytest.approx(single.avg_bits(), abs=1e-12)
+        diff = float(jnp.max(jnp.abs(q.delta_w() - single.delta_w())))
+        assert diff <= tol, (i, diff)
+    assert len(hs) > 1, "spectra chosen to exercise equal-h grouping"
+
+
+def test_stack_entries_bit_identical_without_refine():
+    cfg = LoRAQuantConfig(rho=0.85, ste_steps=0, refine="none")
+    b_stack, a_stack = _stack(L=4, seed=3)
+    batched = quantize_lora_stack(b_stack, a_stack, cfg)
+    for i, q in enumerate(batched):
+        single = quantize_lora(b_stack[i], a_stack[i], cfg)
+        assert np.array_equal(np.asarray(q.a_high.codes),
+                              np.asarray(single.a_high.codes))
+        assert np.array_equal(np.asarray(q.b_high.codes),
+                              np.asarray(single.b_high.codes))
+
+
+def test_adapter_tree_batched_vs_loop():
+    cfg = LoRAQuantConfig(ste_steps=0, refine="none")
+    b_stack, a_stack = _stack(L=3, m=128, n=128, r=8, seed=9)
+    tree = {"layers": {"attn_q": {"a": a_stack, "b": b_stack},
+                       "mlp_up": {"a": a_stack[0], "b": b_stack[0]}}}
+    qa_b = quantize_adapter_tree(tree, cfg, batched=True)
+    qa_l = quantize_adapter_tree(tree, cfg, batched=False)
+    assert qa_b.entries.keys() == qa_l.entries.keys()
+    for path in qa_b.entries:
+        assert len(qa_b.entries[path]) == len(qa_l.entries[path])
+        for qb, ql in zip(qa_b.entries[path], qa_l.entries[path]):
+            assert qb.h == ql.h
+            d = float(jnp.max(jnp.abs(qb.delta_w() - ql.delta_w())))
+            assert d <= 1e-5
+    assert qa_b.avg_bits() == pytest.approx(qa_l.avg_bits(), abs=1e-12)
+
+
+def test_empty_stack():
+    assert quantize_lora_stack(jnp.zeros((0, 8, 4)), jnp.zeros((0, 4, 8)),
+                               LoRAQuantConfig()) == []

@@ -9,10 +9,16 @@ from repro.core import LoRAQuantConfig, quantize_lora
 from repro.core.quant import binary_quantize, rtn_quantize
 from repro.kernels.quant_matmul.ops import (
     _kernel_layout,
+    _pick_tile,
     lora_apply_quantized,
     sgmv_apply,
 )
-from repro.kernels.quant_matmul.kernel import matmul_out, matmul_rhs
+from repro.kernels.quant_matmul.kernel import (
+    LAUNCH_COUNTS,
+    matmul_out,
+    matmul_rhs,
+    reset_launch_counts,
+)
 from repro.kernels.quant_matmul.ref import (
     ref_lora_apply,
     ref_quant_matmul_out,
@@ -28,6 +34,7 @@ def _rand(shape, dtype, seed=0):
     return jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.05).astype(dtype)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,k,m", SHAPES)
 @pytest.mark.parametrize("mode,bits", [("rtn", 2), ("rtn", 4), ("binary", 1)])
 @pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
@@ -49,6 +56,7 @@ def test_matmul_rhs_vs_ref(t, k, m, mode, bits, xdtype):
                                atol=1e-2 if xdtype == jnp.bfloat16 else 1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,k,m", SHAPES[:3])
 @pytest.mark.parametrize("mode", ["rtn", "binary"])
 def test_matmul_out_vs_ref(t, k, m, mode):
@@ -121,3 +129,133 @@ def test_kernel_layout_rank_padding():
     codes, scale, zero, r = _kernel_layout(q)
     assert codes.shape[0] == 8 and r == 3
     assert float(jnp.abs(scale[3:]).max()) == 0.0
+
+
+# --------------------------------------------------------------------------
+# fused single-pass kernels
+# --------------------------------------------------------------------------
+
+def _decayed_qlora(m, n, r, *, rho=0.9, bits_high=2, group_size=128,
+                   decay=0.4, seed=0):
+    rng = np.random.default_rng(seed)
+    u = np.linalg.qr(rng.normal(size=(m, r)))[0]
+    v = np.linalg.qr(rng.normal(size=(n, r)))[0]
+    s = np.exp(-decay * np.arange(r))
+    b = jnp.asarray((u * np.sqrt(s)).astype(np.float32))
+    a = jnp.asarray((np.sqrt(s)[:, None] * v.T).astype(np.float32))
+    return quantize_lora(b, a, LoRAQuantConfig(
+        rho=rho, bits_high=bits_high, group_size=group_size, ste_steps=0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bits_high", [2, 3, 4])
+@pytest.mark.parametrize("rho", [0.8, 1.0])     # rho=1.0 → h == r, no low part
+@pytest.mark.parametrize("t", [23, 64])         # non-multiple + multiple of tile
+def test_fused_lora_apply(bits_high, rho, t):
+    m, n, r = 384, 512, 16
+    ql = _decayed_qlora(m, n, r, rho=rho, bits_high=bits_high, seed=bits_high)
+    assert (ql.a_low is None) == (rho == 1.0)
+    x = _rand((t, n), jnp.float32, seed=t)
+    got = lora_apply_quantized(x, ql, interpret=True, fused=True)
+    want = x @ ql.delta_w().T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    if bits_high != 3:
+        two_pass = lora_apply_quantized(x, ql, interpret=True, fused=False)
+        assert float(jnp.max(jnp.abs(got - two_pass))) <= 1e-3
+    else:                                       # two-pass lacks uint32 packing
+        with pytest.raises(ValueError, match="fused"):
+            lora_apply_quantized(x, ql, interpret=True, fused=False)
+
+
+def test_fused_binary_low_path_contributes():
+    # rho low enough that most energy sits in the binary sub-LoRA
+    ql = _decayed_qlora(256, 256, 16, rho=0.3, decay=0.1, seed=5)
+    assert ql.a_low is not None
+    x = _rand((16, 256), jnp.float32, seed=1)
+    got = lora_apply_quantized(x, ql, interpret=True, fused=True)
+    want = x @ ql.delta_w().T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_is_single_pallas_call():
+    ql = _decayed_qlora(256, 384, 16, rho=0.8)
+    assert ql.a_low is not None
+    x = _rand((16, 384), jnp.float32)
+    reset_launch_counts()
+    lora_apply_quantized(x, ql, interpret=True, fused=True)
+    assert dict(LAUNCH_COUNTS) == {"fused_lora": 1}
+    reset_launch_counts()
+    lora_apply_quantized(x, ql, interpret=True, fused=False)
+    assert dict(LAUNCH_COUNTS) == {"matmul_rhs": 2, "matmul_out": 2}
+
+    ql_hi = _decayed_qlora(256, 384, 16, rho=1.0)   # h == r: no low factors
+    assert ql_hi.a_low is None
+    reset_launch_counts()
+    lora_apply_quantized(x, ql_hi, interpret=True, fused=True)
+    assert dict(LAUNCH_COUNTS) == {"fused_lora": 1}
+    reset_launch_counts()
+    lora_apply_quantized(x, ql_hi, interpret=True, fused=False)
+    assert dict(LAUNCH_COUNTS) == {"matmul_rhs": 1, "matmul_out": 1}
+
+
+@pytest.mark.parametrize("mode", ["rtn", "binary"])
+def test_sgmv_fused_vs_two_pass(mode):
+    rng = np.random.default_rng(4)
+    m, n, r, tile = 256, 384, 16, 8
+    qas, qbts = [], []
+    for i in range(3):
+        a = _rand((r, n), jnp.float32, seed=30 + i)
+        b = _rand((m, r), jnp.float32, seed=40 + i)
+        if mode == "rtn":
+            qas.append(rtn_quantize(a, 2, 128, axis=1))
+            qbts.append(rtn_quantize(b, 2, 128, axis=0))
+        else:
+            qas.append(binary_quantize(a, 128, axis=1))
+            qbts.append(binary_quantize(b, 128, axis=0))
+    segs = [1, 0, 2, 2]
+    seg_ids = np.repeat(segs, tile)
+    x = _rand((len(seg_ids), n), jnp.float32, seed=6)
+    seg_map = jnp.asarray(np.asarray(segs, np.int32))
+
+    reset_launch_counts()
+    fused = sgmv_apply(x, qas, qbts, seg_map, tile_t=tile, interpret=True,
+                       fused=True)
+    assert dict(LAUNCH_COUNTS) == {"sgmv_fused": 1}
+    reset_launch_counts()
+    two = sgmv_apply(x, qas, qbts, seg_map, tile_t=tile, interpret=True,
+                     fused=False)
+    assert dict(LAUNCH_COUNTS) == {"sgmv_rhs": 1, "sgmv_out": 1}
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                               rtol=1e-5, atol=1e-3)
+    want = ref_sgmv(x, qas, qbts, seg_ids)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# tile-size regression (K > cap whose 2^i·cap chain has no ≥128 divisor)
+# --------------------------------------------------------------------------
+
+def test_pick_tile_divides():
+    assert _pick_tile(2112, 64) == 704          # old logic picked 128 ∤ 2112
+    assert _pick_tile(2048, 128) == 2048
+    assert _pick_tile(192, 128) == 192          # ≤ cap: single tile
+    assert _pick_tile(4096, 128) == 2048
+    for n, g in [(2112, 64), (2368, 64), (6144, 128), (2176, 128)]:
+        t = _pick_tile(n, g)
+        assert n % t == 0 and t % g == 0 and t <= 2048
+
+
+def test_odd_k_apply_regression():
+    # K = 2112 with 64-wide groups: the pre-fix `max(tile_k, 128)` silently
+    # dropped the last 64 columns of every K tile sweep.
+    k = 2112
+    ql = _decayed_qlora(256, k, 8, rho=0.9, group_size=64, seed=7)
+    x = _rand((9, k), jnp.float32, seed=8)
+    want = x @ ql.delta_w().T
+    for fused in (True, False):
+        got = lora_apply_quantized(x, ql, interpret=True, fused=fused)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.quant import (
     QuantizedTensor,

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -186,8 +189,17 @@ def test_batch_specs_match_shapes():
 
 # ----- sharding rules -----
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    """AbstractMesh across jax versions: >=0.4.36 takes ((name, size), ...)
+    pairs; older releases take (shape, axis_names)."""
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, names)
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_column_row_parallel_rules():

@@ -6,7 +6,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
 
 from conftest import decaying_lora
 from repro.core import (
