@@ -5,9 +5,10 @@
 Prints ``name,metric=value,...`` CSV lines; ``*.check`` lines assert the
 paper's qualitative claims (PASS/FAIL). ``--json`` additionally writes the
 parsed metrics + check outcomes to a file, so successive PRs can diff a
-perf trajectory. The kernel smoke target used by CI is:
+perf trajectory. The smoke targets used by CI are:
 
     PYTHONPATH=src python -m benchmarks.run --only kernels --json BENCH_kernels.json
+    PYTHONPATH=src python -m benchmarks.run --only serving --json BENCH_serving.json
 """
 
 from __future__ import annotations
@@ -38,13 +39,15 @@ def _parse_line(line: str):
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
-                   help="comma-separated subset (table1,table2,fig2,fig3,fig4,fig6,kernels)")
+                   help="comma-separated subset "
+                        "(table1,table2,fig2,fig3,fig4,fig6,kernels,serving)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write parsed metrics + checks to this JSON file")
     args = p.parse_args(argv)
 
     from . import (
         bench_kernels,
+        bench_serving,
         fig2_split_strategy,
         fig3_ablation,
         fig4_h_selection,
@@ -55,6 +58,7 @@ def main(argv=None):
 
     suites = {
         "kernels": bench_kernels.run,
+        "serving": bench_serving.run,
         "table2": table2_avgbits.run,
         "fig6": fig6_memory.run,
         "table1": table1_quality.run,

@@ -1,5 +1,7 @@
 """Multi-LoRA serving: many users' adapters resident in quantized form,
-segment-batched decoding, and the fused SGMV kernel on the hot path.
+onboarded in one bucketed dispatch, and decoded as ONE heterogeneous batch
+straight from packed codes (fused SGMV on every LoRA linear — no adapter is
+ever dequantized; see docs/serving.md).
 
     PYTHONPATH=src python examples/multi_lora_serving.py
 """
@@ -13,7 +15,7 @@ from repro.core import LoRAQuantConfig
 from repro.core.quant import rtn_quantize
 from repro.kernels.quant_matmul.ops import sgmv_apply
 from repro.kernels.quant_matmul.ref import ref_sgmv
-from repro.launch.serve import main as serve_main
+from repro.launch.serve import main as serve_main, random_trained_lora
 
 
 def kernel_demo():
@@ -36,7 +38,30 @@ def kernel_demo():
           f"{n_adapters} adapters in one kernel; maxerr vs oracle {err:.1e}")
 
 
+def onboarding_demo():
+    """Cross-adapter bucketed onboarding: N uploads, one SVD dispatch per
+    distinct leaf shape (AdapterStore.register_many)."""
+    from repro.models import build_model
+    from repro.serving.engine import AdapterStore
+
+    cfg = get_config("llama3.2-3b", "smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = AdapterStore(LoRAQuantConfig(ste_steps=0))
+    uploads = {
+        f"user_{i}": random_trained_lora(params["lora"], jax.random.PRNGKey(i))
+        for i in range(4)
+    }
+    store.register_many(uploads)
+    print(f"[onboard] {len(uploads)} adapters quantized in one bucketed "
+          f"dispatch; store stats: {store.stats()}")
+
+
 if __name__ == "__main__":
     kernel_demo()
+    onboarding_demo()
+    # End-to-end packed serving: a single mixed-adapter batch decoded
+    # straight from packed codes (swap --mode materialize for the fp-LRU
+    # reference segment loop).
     serve_main(["--arch", "llama3.2-3b", "--adapters", "4", "--requests", "8",
-                "--prompt-len", "16", "--max-new", "4"])
+                "--prompt-len", "16", "--max-new", "4", "--mode", "packed"])

@@ -28,6 +28,8 @@ from .loraquant import (
     dequantize_lora,
     quantize_adapter_set,
     quantize_lora,
+    quantize_lora_pairs,
+    quantize_lora_stacks,
     quantize_lora_stack,
 )
 from .ablations import quantize_lora_variant
@@ -57,6 +59,8 @@ __all__ = [
     "dequantize_lora",
     "quantize_adapter_set",
     "quantize_lora",
+    "quantize_lora_pairs",
+    "quantize_lora_stacks",
     "quantize_lora_stack",
     "quantize_lora_variant",
     "baselines",

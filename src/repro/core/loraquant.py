@@ -41,6 +41,8 @@ __all__ = [
     "QuantizedLoRA",
     "quantize_lora",
     "quantize_lora_stack",
+    "quantize_lora_pairs",
+    "quantize_lora_stacks",
     "dequantize_lora",
     "quantize_adapter_set",
     "adapter_avg_bits",
@@ -243,6 +245,56 @@ def quantize_lora_stack(
         for pos, i in enumerate(idx):
             out[int(i)] = jax.tree_util.tree_map(lambda x: x[pos], stacked)
     return out
+
+
+def quantize_lora_stacks(
+    stacks: list,
+    config: LoRAQuantConfig = LoRAQuantConfig(),
+) -> list:
+    """Shape-bucketed batched Alg. 1 over many layer stacks.
+
+    ``stacks`` is a list of ``(b_stack (Li, m, r), a_stack (Li, r, n))``
+    pairs — one per LoRA-linear path, possibly from *different uploaded
+    adapters*. Same-shape stacks are concatenated (a single-member bucket
+    passes through copy-free) and each bucket runs ONE stacked pipeline:
+    one compiled SVD dispatch plus one refine/quantize dispatch per
+    distinct split ``h``, regardless of how many layers, paths, or user
+    uploads fed the bucket. This is the onboarding-throughput primitive for
+    the many-users serving tier (``AdapterStore.register_many``).
+
+    Returns, in input order, one ``QuantizedLoRA`` list per input stack;
+    math is identical to ``quantize_lora`` per layer (vmapped, not
+    re-derived).
+    """
+    out: list = [None] * len(stacks)
+    buckets: Dict[tuple, list] = {}
+    for i, (b, a) in enumerate(stacks):
+        buckets.setdefault((tuple(b.shape[1:]), tuple(a.shape[1:])), []).append(i)
+    for idx in buckets.values():
+        if len(idx) == 1:
+            b_cat, a_cat = stacks[idx[0]]
+        else:
+            b_cat = jnp.concatenate([jnp.asarray(stacks[i][0]) for i in idx])
+            a_cat = jnp.concatenate([jnp.asarray(stacks[i][1]) for i in idx])
+        qls = quantize_lora_stack(jnp.asarray(b_cat), jnp.asarray(a_cat),
+                                  config)
+        off = 0
+        for i in idx:
+            n = int(stacks[i][0].shape[0])
+            out[i] = qls[off:off + n]
+            off += n
+    return out
+
+
+def quantize_lora_pairs(
+    pairs: list,
+    config: LoRAQuantConfig = LoRAQuantConfig(),
+) -> list:
+    """:func:`quantize_lora_stacks` for loose 2-D ``(B, A)`` pairs: each
+    pair is a length-1 stack; same-shape pairs land in one bucket. Returns
+    ``QuantizedLoRA`` results in input order."""
+    stacks = [(jnp.asarray(b)[None], jnp.asarray(a)[None]) for b, a in pairs]
+    return [qs[0] for qs in quantize_lora_stacks(stacks, config)]
 
 
 def quantize_adapter_set(

@@ -3,6 +3,22 @@ dequantization of packed LoRAQuant factors + skinny matmuls (single-adapter
 and SGMV multi-adapter variants). Validated on CPU via interpret=True; the
 pure-jnp oracle lives in quant_matmul/ref.py."""
 
-from .quant_matmul import lora_apply_quantized, sgmv_apply
+from .quant_matmul import (
+    PackedLoRABatch,
+    lora_apply_quantized,
+    pack_adapter_layers,
+    retile_packed,
+    sgmv_apply,
+    sgmv_apply_packed,
+    stack_packed_adapters,
+)
 
-__all__ = ["lora_apply_quantized", "sgmv_apply"]
+__all__ = [
+    "PackedLoRABatch",
+    "lora_apply_quantized",
+    "pack_adapter_layers",
+    "retile_packed",
+    "sgmv_apply",
+    "sgmv_apply_packed",
+    "stack_packed_adapters",
+]

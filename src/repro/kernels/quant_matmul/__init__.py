@@ -1,4 +1,23 @@
-from .ops import lora_apply_quantized, quant_matmul_rhs, sgmv_apply
+from .ops import (
+    PackedLoRABatch,
+    lora_apply_quantized,
+    pack_adapter_layers,
+    quant_matmul_rhs,
+    retile_packed,
+    sgmv_apply,
+    sgmv_apply_packed,
+    stack_packed_adapters,
+)
 from . import ref
 
-__all__ = ["lora_apply_quantized", "quant_matmul_rhs", "sgmv_apply", "ref"]
+__all__ = [
+    "PackedLoRABatch",
+    "lora_apply_quantized",
+    "pack_adapter_layers",
+    "quant_matmul_rhs",
+    "retile_packed",
+    "sgmv_apply",
+    "sgmv_apply_packed",
+    "stack_packed_adapters",
+    "ref",
+]

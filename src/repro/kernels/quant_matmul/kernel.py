@@ -10,14 +10,17 @@ broadcast-reshape) happens in VMEM/VREGs; only packed bytes cross HBM→VMEM,
 so adapter bandwidth is AvgBits/16 of the fp16 path — these matmuls are
 memory-bound at decode, so bandwidth is wall-time.
 
-Layout contract (== ``repro.core.quant`` storage):
+Layout contract (== ``repro.core.quant`` storage), in brief:
   codes  (R, G, ceil(g/per)) uint8/uint32 — ``per`` codes per storage word
          (8/bits for 1/2/4/8-bit in uint8; 10 for 3-bit in uint32),
          little-endian within the word, padded per *group* to whole words
   scale  (R, G) fp32
   zero   (R, G) int32          — RTN only
 ops.py reshapes codes to (R, G·words_per_group) before the call; R is
-padded to the fp32 sublane multiple (8).
+padded to the fp32 sublane multiple (8). The full packing walkthrough —
+bit layouts per width, the rank-padding rules that make heterogeneous-``h``
+adapter stacks uniform, and the VMEM budget math — lives in
+``docs/packed_format.md``.
 
 Two kernel families:
 
@@ -38,11 +41,10 @@ Two kernel families:
 
 Fused-path layout/VMEM contract: K tiles must be a multiple of the A-side
 quant group (so per-tile scale blocks are exact — ops.py's ``_pick_tile``
-guarantees it); the full packed B factors (R×M/per words + (R, G_m) scales)
-and one (Tt, M) output tile stay VMEM-resident. Worst case at Tt=128,
-K tile=2048, M=8192, R=16: x(128·2048·4B) + out(128·8192·4B) + h(2·128·16·4B)
-+ packed B(2·16·8192/4B) + dequant temporaries ≈ 5.5 MB ≪ 16 MB VMEM. For
-M beyond ~16k lanes, drop ``tile_t`` or fall back to the two-pass path.
+guarantees it); the full packed B factors and one (Tt, M) output tile stay
+VMEM-resident (≈ 5.5 MB worst case at Tt=128/M=8192 — the full budget
+table is in ``docs/packed_format.md``). For M beyond ~16k lanes, drop
+``tile_t`` or fall back to the two-pass path.
 """
 
 from __future__ import annotations
@@ -453,6 +455,10 @@ def sgmv_fused(
     x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero, seg_map, *,
     bits_a: int, binary_a: bool, group_a: int,
     bits_b: int, binary_b: bool, group_b: int,
+    a_lo=None, b_lo=None,
+    bits_lo: int = 1, binary_lo: bool = True,
+    group_al: int = 0, group_bl: int = 0,
+    m: Optional[int] = None,
     tile_t: int = 8, interpret: bool = False,
 ):
     """Single-kernel heterogeneous multi-adapter apply.
@@ -462,32 +468,73 @@ def sgmv_fused(
     the BlockSpec index maps of BOTH factor sides, so each grid step DMAs one
     adapter's packed A and B and computes ``y = (x @ Aᵀ) @ B`` entirely in
     VMEM — the (tile_t, R) ``h`` exists only in registers/VREGs.
+
+    ``a_lo``/``b_lo`` (each an (NA, R_lo, ·) codes/scale/zero triple) add the
+    LoRAQuant binary sub-LoRA in the SAME launch:
+    ``y = (x @ A_hiᵀ) @ B_hi + (x @ A_loᵀ) @ B_lo`` — this is the
+    serve-from-packed-codes decode path, where a whole mixed-adapter batch of
+    both sub-LoRAs is ONE ``pallas_call``. Rank rows padded with zero scales
+    (adapters whose split ``h`` differs, or layers with no low part at all)
+    dequantize to 0 and contribute nothing, so heterogeneous-``h`` adapter
+    stacks are exact.
+
+    ``m`` overrides the output width when the last quant group of B is padded
+    (M not a multiple of ``group_b``); the dequantized pad columns are sliced
+    off in-kernel before the output dot.
     """
     t, k = x.shape
     na, r, _ = a_codes.shape
-    m = b_scale.shape[2] * group_b
+    has_low = a_lo is not None
+    if m is None:
+        m = b_scale.shape[2] * group_b
+    r_lo = a_lo[0].shape[1] if has_low else 0
     grid = (t // tile_t,)
 
-    def kernel(seg_map_ref, x_ref, ac, as_, az, bc, bs, bz, o_ref):
+    def kernel(*refs):
+        if has_low:
+            (seg_map_ref, x_ref, ac, as_, az, bc, bs, bz,
+             alc, als, alz, blc, bls, blz, o_ref) = refs
+        else:
+            (seg_map_ref, x_ref, ac, as_, az, bc, bs, bz, o_ref) = refs
+        xf = x_ref[...].astype(jnp.float32)
         wa = _unpack_dequant_grouped(
             ac[0], as_[0], None if binary_a else az[0], bits_a, group_a)
-        h = jnp.dot(x_ref[...].astype(jnp.float32), wa.T,
+        h = jnp.dot(xf, wa[:, :k].T,
                     preferred_element_type=jnp.float32)     # (Tt, R)
         wb = _unpack_dequant_grouped(
             bc[0], bs[0], None if binary_b else bz[0], bits_b, group_b)
-        o_ref[...] = jnp.dot(h, wb, preferred_element_type=jnp.float32)
+        acc = jnp.dot(h, wb[:, :m], preferred_element_type=jnp.float32)
+        if has_low:
+            wal = _unpack_dequant_grouped(
+                alc[0], als[0], None if binary_lo else alz[0],
+                bits_lo, group_al)
+            h_lo = jnp.dot(xf, wal[:, :k].T,
+                           preferred_element_type=jnp.float32)  # (Tt, R_lo)
+            wbl = _unpack_dequant_grouped(
+                blc[0], bls[0], None if binary_lo else blz[0],
+                bits_lo, group_bl)
+            acc += jnp.dot(h_lo, wbl[:, :m], preferred_element_type=jnp.float32)
+        o_ref[...] = acc
+
+    def _adapter_specs(codes, scale, zero, rr):
+        return [
+            pl.BlockSpec((1, rr, codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, rr, scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, rr, zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
+        ]
+
+    in_specs = [pl.BlockSpec((tile_t, k), lambda i, seg: (i, 0))]
+    in_specs += _adapter_specs(a_codes, a_scale, a_zero, r)
+    in_specs += _adapter_specs(b_codes, b_scale, b_zero, r)
+    operands = [x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero]
+    if has_low:
+        in_specs += _adapter_specs(*a_lo, r_lo)
+        in_specs += _adapter_specs(*b_lo, r_lo)
+        operands += [*a_lo, *b_lo]
 
     grid_spec = pl.GridSpec(
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_t, k), lambda i, seg: (i, 0)),
-            pl.BlockSpec((1, r, a_codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-            pl.BlockSpec((1, r, a_scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-            pl.BlockSpec((1, r, a_zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-            pl.BlockSpec((1, r, b_codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-            pl.BlockSpec((1, r, b_scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-            pl.BlockSpec((1, r, b_zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_t, m), lambda i, seg: (i, 0)),
     )
     _record_launch("sgmv_fused")
@@ -496,4 +543,4 @@ def sgmv_fused(
         grid_spec=pltpu_grid(grid_spec, num_scalar_prefetch=1),
         out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
         interpret=interpret,
-    )(seg_map, x, a_codes, a_scale, a_zero, b_codes, b_scale, b_zero)
+    )(seg_map, *operands)

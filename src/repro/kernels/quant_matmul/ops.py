@@ -12,6 +12,7 @@ kernel body); on real TPUs pass ``interpret=False``.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence
 
@@ -232,4 +233,200 @@ def sgmv_apply(
     y = sgmv_out(h, b_codes, b_scale, b_zero, seg_map,
                  bits=qbts[0].bits, binary=qbts[0].mode == "binary",
                  tile_t=tile_t, interpret=interpret)
+    return (scaling * y).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# packed multi-adapter batches — the serve-from-codes decode path
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "ah_codes", "ah_scale", "ah_zero", "bh_codes", "bh_scale", "bh_zero",
+        "al_codes", "al_scale", "al_zero", "bl_codes", "bl_scale", "bl_zero",
+        "seg",
+    ),
+    meta_fields=("bits_hi", "group_ah", "group_bh", "group_al", "group_bl",
+                 "k", "m", "rank", "tile_t", "interpret"),
+)
+@dataclasses.dataclass(frozen=True)
+class PackedLoRABatch:
+    """One LoRA-linear path, packed for heterogeneous multi-adapter serving.
+
+    Device-resident form of ``NA`` adapters' :class:`QuantizedLoRA` leaves at
+    one path (e.g. ``attn/wq``) — never dequantized. Array layout (see
+    ``docs/packed_format.md``):
+
+    * before the model's layer scan: ``(L, NA, Rp, ·)`` — the scan slices the
+      leading layer axis like any other stacked param;
+    * inside one layer (what :func:`sgmv_apply_packed` consumes):
+      ``(NA, Rp, ·)``.
+
+    ``Rp`` is the LoRA rank padded to the fp32 sublane multiple; every
+    adapter's high rows occupy ``[0, h)`` and low rows ``[0, r - h)`` of their
+    side, with zero-scale padding rows above — padding dequantizes to exactly
+    0, which is what makes adapters with *different* split indices ``h``
+    stackable into one uniform batch. The low (binary) side is always
+    materialized (all-zero when ``h == r``).
+
+    ``seg`` is the per-token-row adapter index, shape ``(T_rows,)`` after the
+    scan slice (stored ``(L, T_rows)`` broadcast before it). It is attached
+    late — by ``Model._backbone`` from the batch-level ``lora["seg"]`` — so
+    the packed codes themselves are batch-independent and cacheable.
+    """
+
+    ah_codes: jax.Array
+    ah_scale: jax.Array
+    ah_zero: jax.Array
+    bh_codes: jax.Array
+    bh_scale: jax.Array
+    bh_zero: jax.Array
+    al_codes: jax.Array
+    al_scale: jax.Array
+    al_zero: jax.Array
+    bl_codes: jax.Array
+    bl_scale: jax.Array
+    bl_zero: jax.Array
+    seg: Optional[jax.Array]
+    bits_hi: int
+    group_ah: int
+    group_bh: int
+    group_al: int
+    group_bl: int
+    k: int
+    m: int
+    rank: int
+    tile_t: int
+    interpret: bool
+
+
+def _zero_side(rp: int, dim: int, group: int):
+    """All-zero binary-side kernel layout for layers with ``h == r``: the
+    same shapes :func:`_kernel_layout` produces for a real 1-bit tensor of
+    ``rp`` rows over ``dim`` features (zero scales → dequantizes to 0)."""
+    g = min(group, dim)
+    ng = -(-dim // g)
+    wpg = -(-g // 8)
+    return (jnp.zeros((rp, ng * wpg), jnp.uint8),
+            jnp.zeros((rp, ng), jnp.float32),
+            jnp.zeros((rp, ng), jnp.int32))
+
+
+def pack_adapter_layers(qls: Sequence[QuantizedLoRA],
+                        interpret: bool = True) -> PackedLoRABatch:
+    """Stack one adapter's per-layer :class:`QuantizedLoRA` list into the
+    ``(L, Rp, ·)`` kernel layout (an adapter-axis-free
+    :class:`PackedLoRABatch`; :func:`stack_packed_adapters` adds ``NA``).
+
+    All layers must share shapes and quant config (true by construction for
+    one LoRA-linear path of one model). The low side is materialized even for
+    layers whose split kept every pair high (``h == r``).
+    """
+    if not qls:
+        raise ValueError("cannot pack an empty layer list")
+    q0 = qls[0]
+    r = q0.rank
+    rp = -(-r // SUBLANE) * SUBLANE
+    k = q0.a_high.orig_shape[1]
+    m = q0.b_high.orig_shape[0]
+    bits = q0.a_high.bits
+    group = q0.config.group_size
+    group_al = min(group, k)
+    group_bl = min(group, m)
+    sides = {name: [] for name in
+             ("ah", "bh", "al", "bl")}
+    for q in qls:
+        if (q.rank, q.a_high.orig_shape[1], q.b_high.orig_shape[0],
+                q.a_high.bits) != (r, k, m, bits):
+            raise ValueError("pack_adapter_layers needs uniform layer shapes "
+                             "and quant config")
+        sides["ah"].append(_kernel_layout(q.a_high, pad_r=rp)[:3])
+        sides["bh"].append(_kernel_layout(q.b_high, pad_r=rp)[:3])
+        if q.a_low is not None:
+            sides["al"].append(_kernel_layout(q.a_low, pad_r=rp)[:3])
+            sides["bl"].append(_kernel_layout(q.b_low, pad_r=rp)[:3])
+        else:
+            sides["al"].append(_zero_side(rp, k, group))
+            sides["bl"].append(_zero_side(rp, m, group))
+    stacked = {name: [jnp.stack([layer[i] for layer in layers])
+                      for i in range(3)]
+               for name, layers in sides.items()}
+    return PackedLoRABatch(
+        *stacked["ah"], *stacked["bh"], *stacked["al"], *stacked["bl"],
+        seg=None,
+        bits_hi=bits,
+        group_ah=q0.a_high.group_size, group_bh=q0.b_high.group_size,
+        group_al=group_al, group_bl=group_bl,
+        k=k, m=m, rank=r, tile_t=1, interpret=interpret,
+    )
+
+
+_PACKED_ARRAY_FIELDS = (
+    "ah_codes", "ah_scale", "ah_zero", "bh_codes", "bh_scale", "bh_zero",
+    "al_codes", "al_scale", "al_zero", "bl_codes", "bl_scale", "bl_zero",
+)
+
+
+def stack_packed_adapters(entries: Sequence[PackedLoRABatch],
+                          tile_t: int = 8) -> PackedLoRABatch:
+    """Stack per-adapter packed entries (each ``(L, Rp, ·)``) along a new
+    adapter axis → ``(L, NA, Rp, ·)``, the form the model's layer scan
+    slices. Adapters must share shapes and quant config (one
+    :class:`~repro.serving.engine.AdapterStore` guarantees this)."""
+    e0 = entries[0]
+    for e in entries[1:]:
+        if (e.bits_hi, e.k, e.m, e.rank, e.group_ah, e.group_bh) != (
+                e0.bits_hi, e0.k, e0.m, e0.rank, e0.group_ah, e0.group_bh):
+            raise ValueError(
+                "heterogeneous batches require adapters with one shape and "
+                "quant config; re-register through a single AdapterStore")
+    arrays = {f: jnp.stack([getattr(e, f) for e in entries], axis=1)
+              for f in _PACKED_ARRAY_FIELDS}
+    return dataclasses.replace(e0, **arrays, tile_t=tile_t)
+
+
+def retile_packed(tree, tile_t: int):
+    """Return a copy of a packed lora tree with every leaf's token-tile size
+    replaced (prefill and decode share the packed codes but tile differently:
+    whole padded prompts vs one row per sequence)."""
+    def one(leaf):
+        if isinstance(leaf, PackedLoRABatch):
+            return dataclasses.replace(leaf, tile_t=tile_t)
+        return leaf
+    return jax.tree_util.tree_map(
+        one, tree, is_leaf=lambda n: isinstance(n, PackedLoRABatch))
+
+
+def sgmv_apply_packed(x: jax.Array, pb: PackedLoRABatch, *,
+                      scaling: float = 1.0) -> jax.Array:
+    """Heterogeneous multi-adapter LoRA apply straight from packed codes.
+
+    ``x`` is ``(T_rows, K)`` with ``pb`` in its per-layer ``(NA, Rp, ·)``
+    form and ``pb.seg`` the per-row adapter index; rows of one tile
+    (``pb.tile_t`` consecutive rows) must map to a single adapter — the
+    engine guarantees this by padding prompts to a tile multiple. Both
+    sub-LoRAs of the selected adapter are applied in ONE ``pallas_call``
+    (:func:`repro.kernels.quant_matmul.kernel.sgmv_fused`)."""
+    if pb.seg is None:
+        raise ValueError("PackedLoRABatch has no segment ids attached; "
+                         "serve through MultiLoRAEngine (or set lora['seg'])")
+    t, k = x.shape
+    if k != pb.k:
+        raise ValueError(f"x features {k} != packed adapter K {pb.k}")
+    if t % pb.tile_t or t != pb.seg.shape[0]:
+        raise ValueError(
+            f"rows {t} must equal len(seg) {pb.seg.shape[0]} and divide into "
+            f"tiles of {pb.tile_t}")
+    seg_tiles = pb.seg[:: pb.tile_t]
+    y = sgmv_fused(
+        x, pb.ah_codes, pb.ah_scale, pb.ah_zero,
+        pb.bh_codes, pb.bh_scale, pb.bh_zero, seg_tiles,
+        bits_a=pb.bits_hi, binary_a=False, group_a=pb.group_ah,
+        bits_b=pb.bits_hi, binary_b=False, group_b=pb.group_bh,
+        a_lo=(pb.al_codes, pb.al_scale, pb.al_zero),
+        b_lo=(pb.bl_codes, pb.bl_scale, pb.bl_zero),
+        bits_lo=1, binary_lo=True,
+        group_al=pb.group_al, group_bl=pb.group_bl,
+        m=pb.m, tile_t=pb.tile_t, interpret=pb.interpret)
     return (scaling * y).astype(x.dtype)

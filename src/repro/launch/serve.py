@@ -60,6 +60,11 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--variant", default="2@0.9")
+    p.add_argument("--mode", default="packed",
+                   choices=("packed", "materialize"),
+                   help="packed: heterogeneous batch straight from packed "
+                        "codes (fused SGMV); materialize: per-adapter "
+                        "segment loop over dequantized fp trees")
     p.add_argument("--no-quant", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -86,7 +91,8 @@ def main(argv=None):
     print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
           f"store stats: {store.stats()}")
 
-    engine = MultiLoRAEngine(model, params, store, cache_capacity=128)
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=128,
+                             mode=args.mode)
     drng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -99,8 +105,9 @@ def main(argv=None):
     done = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
-    print(f"[serve] {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    print(f"[serve] mode={args.mode}: {len(done)} requests, {total_tokens} "
+          f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s); "
+          f"fp-resident LoRA bytes: {store.fp_resident_bytes()}")
     print(f"[serve] sample output (req 0): {done[0].output.tolist()}")
     return done
 

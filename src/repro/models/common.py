@@ -159,14 +159,19 @@ def linear(
     """``x @ W (+ LoRA)``. The LoRA path computes in the LoRA dtype and is a
     rank-r bottleneck: (x Aᵀ) Bᵀ — never materializes ΔW.
 
-    ``lora`` may also be a LoRAQuant-compressed adapter leaf
-    (``repro.core.QuantizedLoRA``): the update is then computed straight
-    from the packed codes by the single-pass fused Pallas kernel — no fp
-    materialization, one ``pallas_call``."""
+    ``lora`` may also be a LoRAQuant-compressed adapter leaf, applied
+    straight from packed codes by a single-pass fused Pallas kernel — no fp
+    materialization, one ``pallas_call`` (see ``docs/serving.md``):
+
+    * ``repro.core.QuantizedLoRA`` — one adapter for the whole batch;
+    * ``repro.kernels.PackedLoRABatch`` — a stack of adapters with per-token
+      segment ids (heterogeneous multi-adapter serving), dispatched to the
+      fused SGMV kernel."""
     y = x @ base["w"]
     if lora is None:
         return y
     from repro.core.loraquant import QuantizedLoRA
+    from repro.kernels import PackedLoRABatch
 
     if isinstance(lora, QuantizedLoRA):
         from repro.kernels import lora_apply_quantized
@@ -174,6 +179,12 @@ def linear(
         x2 = x.reshape(-1, x.shape[-1])
         upd = lora_apply_quantized(x2, lora, scaling=scaling, fused=True,
                                    interpret=interpret)
+        return y + upd.reshape(y.shape).astype(y.dtype)
+    if isinstance(lora, PackedLoRABatch):
+        from repro.kernels import sgmv_apply_packed
+
+        x2 = x.reshape(-1, x.shape[-1])
+        upd = sgmv_apply_packed(x2, lora, scaling=scaling)
         return y + upd.reshape(y.shape).astype(y.dtype)
     xl = x.astype(lora["a"].dtype)
     upd = (xl @ lora["a"].T) @ lora["b"].T

@@ -263,17 +263,39 @@ class Model:
 
     # ----- backbone -----
 
+    @staticmethod
+    def _attach_seg(group_lora, seg, count: int):
+        """Broadcast the batch-level per-token adapter segment ids into every
+        packed multi-adapter leaf of one layer group, so the layer scan can
+        slice them alongside the stacked packed codes. Serving engines put
+        ``seg`` at ``lora["seg"]`` (shape ``(T_rows,)``, one adapter index
+        per flattened token row) next to heterogeneous-batch ``lora`` trees
+        whose leaves are :class:`repro.kernels.PackedLoRABatch`."""
+        import dataclasses as _dc
+
+        from repro.kernels import PackedLoRABatch
+
+        seg_l = jnp.broadcast_to(seg, (count,) + seg.shape)
+        return jax.tree_util.tree_map(
+            lambda leaf: (_dc.replace(leaf, seg=seg_l)
+                          if isinstance(leaf, PackedLoRABatch) else leaf),
+            group_lora,
+            is_leaf=lambda n: isinstance(n, PackedLoRABatch))
+
     def _backbone(self, params, x, positions, caches, cache_pos):
         """Run all layer groups. ``caches`` is None (sequence mode) or the
         stacked cache list (decode / stateful mode)."""
         cfg = self.cfg
         base, lora = params["base"], params["lora"]
+        seg = lora.get("seg") if isinstance(lora, dict) else None
         aux_total = 0.0
         new_caches = [] if caches is not None else None
         x = self._constrain_act(x)
 
         for gi, block in enumerate(cfg.blocks):
             gb, gl = base["groups"][gi], lora["groups"][gi]
+            if seg is not None:
+                gl = self._attach_seg(gl, seg, block.count)
             gcache = caches[gi] if caches is not None else None
 
             def body(carry, layer):

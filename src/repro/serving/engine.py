@@ -1,23 +1,30 @@
 """Multi-LoRA serving engine (the paper's deployment scenario).
 
-Components:
+Components (full walkthrough in ``docs/serving.md``):
 
 * :class:`AdapterStore` — holds many adapters *quantized* (LoRAQuant packed
-  codes: the HBM-resident form). Dequantized fp LoRA trees are produced on
-  demand through a byte-budgeted LRU — the working set stays at AvgBits rate
-  while only the adapters actively decoding pay fp16 residency.
-* :class:`MultiLoRAEngine` — S-LoRA-style segment batching: pending requests
-  are grouped by adapter id; each segment runs batched prefill + decode with
-  that adapter's LoRA tree swapped into the model params. (The single-pass
-  fused Pallas kernels in ``repro.kernels`` — ``lora_apply_quantized`` with
-  ``fused=True`` and the one-call ``sgmv_apply`` — are the direct-from-codes
-  alternative for heterogeneous batches; the engine-level segmentation is
-  the portable path.)
+  codes: the HBM-resident form) and exposes two serving forms:
 
-Adapter onboarding is batched by default: ``quantize_adapter_tree`` feeds
-each leaf's layer stack through ``repro.core.quantize_lora_stack`` (one
-compiled SVD + one refine/quantize dispatch per distinct ``h``) instead of
-a per-layer Python loop.
+  - **packed** (:meth:`AdapterStore.pack_batch`) — a device-resident lora
+    tree whose leaves are :class:`repro.kernels.PackedLoRABatch` stacks of
+    the requested adapters' codes. Decode reads these directly through the
+    fused SGMV Pallas kernel; nothing is ever dequantized and no fp16 LoRA
+    bytes exist.
+  - **materialize** (:meth:`AdapterStore.materialize`) — dequantized fp LoRA
+    trees through a byte-budgeted LRU; the portable reference path.
+
+* :class:`MultiLoRAEngine` — heterogeneous batching over packed codes
+  (``mode="packed"``, default): ALL pending requests run as ONE batch whose
+  per-token adapter segment ids ride through prefill and decode to the SGMV
+  kernel of every LoRA linear. ``mode="materialize"`` keeps the S-LoRA-style
+  per-adapter segment loop (fp tree swapped into the params per segment) as
+  the reference implementation.
+
+Adapter onboarding is batched across *adapters* as well as layers:
+``AdapterStore.register_many`` buckets every same-shape LoRA linear of every
+uploaded adapter into one ``quantize_lora_stacks`` pipeline — one compiled
+SVD dispatch plus one refine/quantize dispatch per distinct split ``h`` for
+the whole upload batch.
 
 Requests are plain dataclasses; generation is greedy. The engine is
 synchronous by design — wrap ``engine.run()`` in your RPC layer of choice.
@@ -27,8 +34,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +44,13 @@ from repro.core import (
     LoRAQuantConfig,
     QuantizedLoRA,
     quantize_lora,
-    quantize_lora_stack,
+    quantize_lora_stacks,
+)
+from repro.kernels import (
+    PackedLoRABatch,
+    pack_adapter_layers,
+    retile_packed,
+    stack_packed_adapters,
 )
 
 
@@ -83,30 +95,41 @@ class QuantizedAdapter:
         return self.total_bits() / max(self.num_params(), 1)
 
 
+def _leaf_pairs(leaf) -> Tuple[np.ndarray, np.ndarray]:
+    """One {'a','b'} leaf → flattened per-layer 3-D stacks (Ln, ·, ·)."""
+    a, b = np.asarray(leaf["a"]), np.asarray(leaf["b"])
+    if a.ndim == 2:
+        a, b = a[None], b[None]
+    a2 = a.reshape((-1,) + a.shape[-2:])
+    b2 = b.reshape((-1,) + b.shape[-2:])
+    return a2, b2
+
+
 def quantize_adapter_tree(lora_tree, config: LoRAQuantConfig,
                           batched: bool = True) -> QuantizedAdapter:
     """Quantize every LoRA linear of an adapter tree.
 
-    ``batched=True`` (default) runs each leaf's layer stack through the
-    vmapped pipeline (``quantize_lora_stack``): one compiled SVD call plus
-    one refine+quantize call per distinct split index ``h``, instead of L
-    independent per-layer Python pipelines — the onboarding-throughput path
-    for the millions-of-uploaded-adapters scenario. ``batched=False`` keeps
-    the per-layer loop as the reference (results match to float precision).
+    ``batched=True`` (default) buckets ALL paths' layer stacks by shape and
+    runs each bucket through one vmapped pipeline (``quantize_lora_stacks``):
+    one compiled SVD call per distinct leaf shape plus one refine+quantize
+    call per distinct split index ``h``, instead of L-per-path independent
+    Python pipelines — the onboarding-throughput path for the
+    millions-of-uploaded-adapters scenario. ``batched=False`` keeps the
+    per-layer loop as the reference (results match to float precision).
     """
     entries: Dict[str, List[QuantizedLoRA]] = {}
-    for path, leaf in iter_lora_linears(lora_tree):
-        a, b = np.asarray(leaf["a"]), np.asarray(leaf["b"])
-        if a.ndim == 2:
-            a, b = a[None], b[None]
-        # leading dims (layer-stack, experts) are flattened to a list
-        lead = a.shape[:-2]
-        a2 = a.reshape((-1,) + a.shape[-2:])
-        b2 = b.reshape((-1,) + b.shape[-2:])
-        if batched:
-            entries[path] = quantize_lora_stack(
-                jnp.asarray(b2), jnp.asarray(a2), config)
-        else:
+    if batched:
+        order: List[str] = []
+        stacks = []
+        for path, leaf in iter_lora_linears(lora_tree):
+            a2, b2 = _leaf_pairs(leaf)
+            order.append(path)
+            stacks.append((b2, a2))
+        for path, qls in zip(order, quantize_lora_stacks(stacks, config)):
+            entries[path] = qls
+    else:
+        for path, leaf in iter_lora_linears(lora_tree):
+            a2, b2 = _leaf_pairs(leaf)
             entries[path] = [
                 quantize_lora(jnp.asarray(b2[i]), jnp.asarray(a2[i]), config)
                 for i in range(a2.shape[0])
@@ -140,7 +163,20 @@ def dequantize_adapter(qa: QuantizedAdapter, like_tree) -> Any:
 
 
 class AdapterStore:
-    """Quantized-at-rest adapter registry with a byte-budgeted fp LRU."""
+    """Quantized-at-rest adapter registry.
+
+    Serving reads go through one of two forms:
+
+    * :meth:`pack_batch` — packed device-resident stacks for the
+      heterogeneous SGMV decode path (never dequantizes; per-adapter packed
+      layouts are cached in ``self._packed``).
+    * :meth:`materialize` — fp LoRA trees through a byte-budgeted LRU
+      (``fp_cache_bytes``); only adapters actively decoding on the reference
+      path pay fp16-equivalent residency.
+
+    Re-registering an ``adapter_id`` invalidates both caches — a stale fp
+    tree in the LRU would otherwise keep serving the pre-update adapter.
+    """
 
     def __init__(self, config: LoRAQuantConfig, fp_cache_bytes: int = 1 << 30,
                  batched_quantize: bool = True):
@@ -149,15 +185,57 @@ class AdapterStore:
         self.fp_cache_bytes = fp_cache_bytes
         self.batched_quantize = batched_quantize
         self._lru: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
+        self._packed: Dict[Tuple[str, bool], Dict[str, PackedLoRABatch]] = {}
+        self._batch_cache: Dict[tuple, Any] = {}
+
+    def _invalidate(self, adapter_id: str):
+        self._lru.pop(adapter_id, None)
+        for flag in (True, False):
+            self._packed.pop((adapter_id, flag), None)
+        self._batch_cache.clear()
 
     def register(self, adapter_id: str, lora_tree) -> QuantizedAdapter:
         qa = quantize_adapter_tree(lora_tree, self.config,
                                    batched=self.batched_quantize)
+        self._invalidate(adapter_id)
         self.quantized[adapter_id] = qa
         return qa
 
     def register_quantized(self, adapter_id: str, qa: QuantizedAdapter):
+        self._invalidate(adapter_id)
         self.quantized[adapter_id] = qa
+
+    def register_many(self, trees: Dict[str, Any]) -> Dict[str, QuantizedAdapter]:
+        """Onboard many uploaded adapters in one bucketed dispatch.
+
+        Every same-shape LoRA linear across ALL trees (layers × paths ×
+        adapters) lands in one ``quantize_lora_stacks`` bucket: for N
+        uploads of one architecture this is one compiled SVD call per
+        distinct leaf shape — not N·paths — which is what bounds onboarding
+        throughput at the many-users tier (ROADMAP: batched onboarding
+        across adapters). Math per adapter is identical to :meth:`register`.
+        """
+        order: List[Tuple[str, str]] = []            # (adapter_id, path)
+        stacks = []
+        for adapter_id, tree in trees.items():
+            for path, leaf in iter_lora_linears(tree):
+                a2, b2 = _leaf_pairs(leaf)
+                order.append((adapter_id, path))
+                stacks.append((b2, a2))
+        results = quantize_lora_stacks(stacks, self.config)
+        out: Dict[str, QuantizedAdapter] = {}
+        for (adapter_id, path), qls in zip(order, results):
+            qa = out.get(adapter_id)
+            if qa is None:
+                template = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    trees[adapter_id])
+                qa = out[adapter_id] = QuantizedAdapter(entries={},
+                                                        template=template)
+            qa.entries[path] = qls
+        for adapter_id, qa in out.items():
+            self.register_quantized(adapter_id, qa)
+        return out
 
     def _tree_bytes(self, tree) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
@@ -173,8 +251,74 @@ class AdapterStore:
             self._lru.popitem(last=False)
         return tree
 
+    # ----- packed (serve-from-codes) form -----
+
+    def packed_entries(self, adapter_id: str,
+                       interpret: bool = True) -> Dict[str, PackedLoRABatch]:
+        """Per-path packed kernel layouts ``(L, Rp, ·)`` for one adapter,
+        built once from the quantized codes and cached device-resident
+        (keyed by the ``interpret`` flag, which is baked into the leaf)."""
+        key = (adapter_id, interpret)
+        if key not in self._packed:
+            qa = self.quantized[adapter_id]
+            self._packed[key] = {
+                path: pack_adapter_layers(qs, interpret=interpret)
+                for path, qs in qa.entries.items()
+            }
+        return self._packed[key]
+
+    def pack_batch(self, adapter_ids: Sequence[str], like_tree,
+                   tile_t: int = 8, interpret: bool = True) -> Any:
+        """Build a lora tree for a heterogeneous batch over ``adapter_ids``:
+        every {'a','b'} leaf becomes a :class:`PackedLoRABatch` stack
+        ``(L, NA, Rp, ·)`` in adapter order. The tree mirrors ``like_tree``
+        so the model's layer scan consumes it unchanged; attach per-token
+        segment ids at ``lora["seg"]`` (adapter index per flattened row).
+
+        The stacked tree is cached per adapter-id tuple (a serving loop
+        re-batching the same hot adapter set pays the ``jnp.stack`` cost
+        once); any re-register invalidates the cache. ``like_tree`` only
+        provides structure, so the cache key ignores it.
+        """
+        key = (tuple(adapter_ids), tile_t, interpret)
+        cached = self._batch_cache.get(key)
+        if cached is not None:
+            return cached
+        per = [self.packed_entries(a, interpret=interpret)
+               for a in adapter_ids]
+
+        def rebuild(node, path):
+            if isinstance(node, dict):
+                if set(node.keys()) == {"a", "b"}:
+                    shape = tuple(node["a"].shape)
+                    if len(shape) != 3:
+                        raise NotImplementedError(
+                            f"packed serving needs plain (L, r, in) layer "
+                            f"stacks; leaf {path} has shape {shape} (extra "
+                            f"lead dims, e.g. MoE experts) — serve it with "
+                            f"mode='materialize'")
+                    return stack_packed_adapters([p[path] for p in per],
+                                                 tile_t=tile_t)
+                return {k: rebuild(v, f"{path}/{k}") for k, v in node.items()}
+            if isinstance(node, list):
+                return [rebuild(v, f"{path}/{i}") for i, v in enumerate(node)]
+            if isinstance(node, tuple):
+                return tuple(rebuild(v, f"{path}/{i}") for i, v in enumerate(node))
+            return node
+
+        tree = rebuild(like_tree, "")
+        self._batch_cache[key] = tree
+        return tree
+
+    # ----- accounting -----
+
     def resident_bits(self) -> int:
         return sum(qa.total_bits() for qa in self.quantized.values())
+
+    def fp_resident_bytes(self) -> int:
+        """Bytes of dequantized fp LoRA trees currently held by the LRU —
+        0 whenever serving runs purely from packed codes."""
+        return sum(self._tree_bytes(t) for t in self._lru.values())
 
     def stats(self) -> Dict[str, float]:
         n = len(self.quantized)
@@ -185,6 +329,7 @@ class AdapterStore:
             "avg_bits": bits / max(params, 1),
             "quantized_mb": bits / 8 / 1e6,
             "fp16_equiv_mb": params * 2 / 1e6,
+            "fp_lru_mb": self.fp_resident_bytes() / 1e6,
         }
 
 
@@ -198,12 +343,31 @@ class Request:
 
 
 class MultiLoRAEngine:
+    """Batched greedy generation over many users' adapters.
+
+    ``mode="packed"`` (default): ONE heterogeneous batch per :meth:`run` —
+    per-token adapter segment ids ride through prefill and decode and every
+    LoRA linear applies the right adapter straight from packed codes via the
+    fused SGMV kernel. No fp LoRA tree is ever allocated (the store's LRU
+    stays empty).
+
+    ``mode="materialize"``: the reference S-LoRA-style segment loop —
+    requests grouped by adapter, each segment served with that adapter's
+    dequantized fp tree swapped into the params. Both modes left-pad prompts
+    to the same global ``tmax`` (a multiple of ``seg_tile``), so their
+    outputs match token-for-token.
+    """
+
     def __init__(self, model, base_params, store: AdapterStore,
-                 cache_capacity: int = 512):
+                 cache_capacity: int = 512, mode: str = "packed",
+                 seg_tile: int = 8, interpret: bool = True):
         self.model = model
         self.params = base_params         # {"base", "lora"(template)}
         self.store = store
         self.capacity = cache_capacity
+        self.mode = mode
+        self.seg_tile = seg_tile
+        self.interpret = interpret
         self.pending: List[Request] = []
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_capacity))
@@ -212,38 +376,77 @@ class MultiLoRAEngine:
     def submit(self, req: Request):
         self.pending.append(req)
 
-    def _segments(self) -> Dict[str, List[Request]]:
+    def _segments(self, reqs: Sequence[Request]) -> Dict[str, List[Request]]:
         segs: Dict[str, List[Request]] = collections.defaultdict(list)
-        for r in self.pending:
+        for r in reqs:
             segs[r.adapter_id].append(r)
         return segs
 
-    def run(self) -> List[Request]:
-        """Process all pending requests, segment-batched by adapter."""
-        done = []
-        for adapter_id, reqs in self._segments().items():
+    def _tmax(self, reqs: Sequence[Request]) -> int:
+        t = max(len(r.prompt) for r in reqs)
+        return -(-t // self.seg_tile) * self.seg_tile
+
+    def _generate(self, params_prefill, params_decode,
+                  reqs: Sequence[Request], tmax: int) -> None:
+        """Shared greedy loop: left-pad to ``tmax``, prefill once, decode to
+        the longest request, slice each request's output."""
+        toks = np.stack([
+            np.pad(r.prompt, (tmax - len(r.prompt), 0))    # left-pad
+            for r in reqs
+        ]).astype(np.int32)
+        logits, caches = self._prefill(params_prefill,
+                                       {"tokens": jnp.asarray(toks)})
+        last = jnp.argmax(logits[:, -1, :], axis=-1)
+        n_new = max(r.max_new_tokens for r in reqs)
+        outs = [last]
+        pos = tmax
+        for _ in range(n_new - 1):
+            logits, caches = self._decode(
+                params_decode, last[:, None], caches, jnp.int32(pos))
+            last = jnp.argmax(logits[:, -1, :], axis=-1)
+            outs.append(last)
+            pos += 1
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)  # (B, n_new)
+        for i, r in enumerate(reqs):
+            r.output = gen[i, : r.max_new_tokens]
+
+    def _run_packed(self, reqs: List[Request]) -> List[Request]:
+        """One heterogeneous batch: decode straight from packed codes."""
+        ids = sorted({r.adapter_id for r in reqs})   # canonical → cache-stable
+        aidx = np.asarray([ids.index(r.adapter_id) for r in reqs], np.int32)
+        tmax = self._tmax(reqs)
+        packed = self.store.pack_batch(ids, self.params["lora"],
+                                       tile_t=self.seg_tile,
+                                       interpret=self.interpret)
+        # prefill: each padded prompt is tmax rows (a whole number of
+        # seg_tile token tiles, all one adapter); decode: one row per
+        # sequence, tile_t = 1.
+        pre = {"base": self.params["base"],
+               "lora": {"groups": packed["groups"],
+                        "seg": jnp.repeat(jnp.asarray(aidx), tmax)}}
+        dec = {"base": self.params["base"],
+               "lora": {"groups": retile_packed(packed, 1)["groups"],
+                        "seg": jnp.asarray(aidx)}}
+        self._generate(pre, dec, reqs, tmax)
+        return reqs
+
+    def _run_materialize(self, reqs: List[Request]) -> List[Request]:
+        """Reference segment loop over dequantized fp trees (LRU-cached)."""
+        tmax = self._tmax(reqs)
+        for adapter_id, seg_reqs in self._segments(reqs).items():
             lora = self.store.materialize(adapter_id, self.params["lora"])
             params = {"base": self.params["base"], "lora": lora}
-            # bucket by prompt length (pad to max within segment)
-            tmax = max(len(r.prompt) for r in reqs)
-            toks = np.stack([
-                np.pad(r.prompt, (tmax - len(r.prompt), 0))    # left-pad
-                for r in reqs
-            ]).astype(np.int32)
-            logits, caches = self._prefill(params, {"tokens": jnp.asarray(toks)})
-            last = jnp.argmax(logits[:, -1, :], axis=-1)
-            n_new = max(r.max_new_tokens for r in reqs)
-            outs = [last]
-            pos = tmax
-            for i in range(n_new - 1):
-                logits, caches = self._decode(
-                    params, last[:, None], caches, jnp.int32(pos))
-                last = jnp.argmax(logits[:, -1, :], axis=-1)
-                outs.append(last)
-                pos += 1
-            gen = np.stack([np.asarray(o) for o in outs], axis=1)  # (B, n_new)
-            for i, r in enumerate(reqs):
-                r.output = gen[i, : r.max_new_tokens]
-                done.append(r)
-        self.pending.clear()
-        return done
+            self._generate(params, params, seg_reqs, tmax)
+        return reqs
+
+    def run(self, mode: Optional[str] = None) -> List[Request]:
+        """Process all pending requests; returns them with ``output`` set."""
+        mode = mode or self.mode
+        if mode not in ("packed", "materialize"):
+            raise ValueError(f"unknown serving mode {mode!r}")  # keep pending
+        reqs, self.pending = self.pending, []
+        if not reqs:
+            return []
+        if mode == "packed":
+            return self._run_packed(reqs)
+        return self._run_materialize(reqs)

@@ -5,13 +5,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import dataclasses
+
+import jax
+
 from repro.core import LoRAQuantConfig, quantize_lora
 from repro.core.quant import binary_quantize, rtn_quantize
 from repro.kernels.quant_matmul.ops import (
     _kernel_layout,
     _pick_tile,
     lora_apply_quantized,
+    pack_adapter_layers,
     sgmv_apply,
+    sgmv_apply_packed,
+    stack_packed_adapters,
 )
 from repro.kernels.quant_matmul.kernel import (
     LAUNCH_COUNTS,
@@ -232,6 +239,71 @@ def test_sgmv_fused_vs_two_pass(mode):
     want = ref_sgmv(x, qas, qbts, seg_ids)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# packed heterogeneous batches (both sub-LoRAs, mixed h, one pallas_call)
+# --------------------------------------------------------------------------
+
+def _packed_layer(qls, tile_t):
+    """NA single-layer QuantizedLoRAs → per-layer PackedLoRABatch (NA, Rp, ·)."""
+    pb = stack_packed_adapters([pack_adapter_layers([q]) for q in qls],
+                               tile_t=tile_t)
+    return jax.tree_util.tree_map(lambda x: x[0], pb)   # drop the L axis
+
+
+@pytest.mark.parametrize(
+    "bits_high",
+    [2, pytest.param(3, marks=pytest.mark.slow)])  # uint32 interpret is slow
+def test_sgmv_packed_mixed_h_vs_ref(bits_high):
+    """Mixed-adapter apply straight from packed codes: adapters with
+    DIFFERENT split indices h (incl. one with no binary part at all) in one
+    batch must match the per-adapter oracle, in one pallas_call."""
+    m, n, r, tile = 256, 384, 16, 8
+    qls = [
+        _decayed_qlora(m, n, r, rho=0.8, bits_high=bits_high, seed=50),
+        _decayed_qlora(m, n, r, rho=0.95, bits_high=bits_high, decay=0.2,
+                       seed=51),
+        _decayed_qlora(m, n, r, rho=1.0, bits_high=bits_high, seed=52),
+    ]
+    hs = {q.h for q in qls}
+    assert len(hs) > 1 and qls[2].a_low is None
+    segs = [1, 0, 2, 1, 2]
+    seg_rows = jnp.asarray(np.repeat(segs, tile).astype(np.int32))
+    x = _rand((len(segs) * tile, n), jnp.float32, seed=60)
+
+    pb = dataclasses.replace(_packed_layer(qls, tile), seg=seg_rows)
+    reset_launch_counts()
+    got = sgmv_apply_packed(x, pb, scaling=1.5)
+    assert dict(LAUNCH_COUNTS) == {"sgmv_fused": 1}
+
+    want = np.zeros((x.shape[0], m), np.float32)
+    for i, a in enumerate(np.repeat(segs, tile)):
+        want[i] = 1.5 * np.asarray(x[i] @ qls[a].delta_w().T)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_sgmv_packed_decode_tile_one():
+    """tile_t=1 — the decode shape: every row its own adapter, unsorted."""
+    m, n, r = 128, 256, 8
+    qls = [_decayed_qlora(m, n, r, rho=0.7, seed=70 + i, decay=0.2 * (i + 1))
+           for i in range(3)]
+    seg = jnp.asarray(np.asarray([2, 0, 1, 0], np.int32))
+    x = _rand((4, n), jnp.float32, seed=71)
+    pb = dataclasses.replace(_packed_layer(qls, 1), seg=seg)
+    got = sgmv_apply_packed(x, pb)
+    for i, a in enumerate(np.asarray(seg)):
+        want = np.asarray(x[i] @ qls[a].delta_w().T)
+        np.testing.assert_allclose(np.asarray(got[i]), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_sgmv_packed_requires_seg():
+    qls = [_decayed_qlora(128, 256, 8, seed=80)]
+    pb = _packed_layer(qls, 8)
+    x = _rand((8, 256), jnp.float32)
+    with pytest.raises(ValueError, match="segment ids"):
+        sgmv_apply_packed(x, pb)
 
 
 # --------------------------------------------------------------------------

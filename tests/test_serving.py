@@ -99,6 +99,124 @@ def test_quantized_vs_fp_adapter_outputs_close(tiny_model):
     assert d_q < 0.5 * d_0
 
 
+# --------------------------------------------------------------------------
+# heterogeneous packed serving (decode straight from packed codes)
+# --------------------------------------------------------------------------
+
+def _mk_requests(cfg, n, n_adapters, seed=7, prompt_lens=None, max_new=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = prompt_lens[rid] if prompt_lens else 8
+        reqs.append(Request(
+            request_id=rid, adapter_id=f"u{rid % n_adapters}",
+            prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+            max_new_tokens=max_new[rid] if max_new else 4))
+    return reqs
+
+
+def _run_both_modes(model, params, store, reqs_fn):
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=64)
+    for r in reqs_fn():
+        engine.submit(r)
+    packed = {r.request_id: r.output for r in engine.run(mode="packed")}
+    # acceptance: packed decode allocates NO per-adapter fp LoRA trees
+    assert len(store._lru) == 0 and store.fp_resident_bytes() == 0
+    for r in reqs_fn():
+        engine.submit(r)
+    ref = {r.request_id: r.output for r in engine.run(mode="materialize")}
+    assert store.fp_resident_bytes() > 0
+    return packed, ref
+
+
+def test_packed_heterogeneous_matches_reference(tiny_model):
+    """One mixed-adapter batch from packed codes == the segment-loop fp
+    reference, token for token: mixed prompt lengths, three adapters with
+    different per-layer split indices h, and one request that finishes
+    early (smaller max_new_tokens)."""
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(3):
+        store.register(f"u{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(40 + i), scale=0.05))
+    hs = {q.h for qa in store.quantized.values()
+          for qs in qa.entries.values() for q in qs}
+    assert len(hs) > 1                       # genuinely heterogeneous splits
+
+    packed, ref = _run_both_modes(
+        model, params, store,
+        lambda: _mk_requests(cfg, 4, 3, prompt_lens=[5, 8, 11, 8],
+                             max_new=[4, 2, 4, 4]))
+    assert packed.keys() == ref.keys()
+    for rid in packed:
+        np.testing.assert_array_equal(packed[rid], ref[rid])
+    assert len(packed[1]) == 2               # early finisher kept its length
+
+
+@pytest.mark.slow
+def test_packed_3bit_adapter_parity(tiny_model):
+    """The packed path must serve 3-bit (uint32-packed) adapters — the
+    width the two-pass kernels cannot do — identically to the reference."""
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, bits_high=3, ste_steps=0))
+    for i in range(2):
+        store.register(f"u{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(50 + i), scale=0.05))
+    packed, ref = _run_both_modes(
+        model, params, store, lambda: _mk_requests(cfg, 3, 2, seed=11))
+    for rid in packed:
+        np.testing.assert_array_equal(packed[rid], ref[rid])
+
+
+def test_register_invalidates_fp_lru(tiny_model):
+    """Regression: re-registering an adapter_id must not keep serving the
+    old fp tree out of the LRU."""
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    t_old = random_trained_lora(params["lora"], jax.random.PRNGKey(60))
+    t_new = random_trained_lora(params["lora"], jax.random.PRNGKey(61))
+    store.register("u", t_old)
+    stale = store.materialize("u", params["lora"])
+    store.register("u", t_new)               # user re-uploads their adapter
+    assert len(store._lru) == 0              # fp cache invalidated
+    fresh = store.materialize("u", params["lora"])
+    direct = dequantize_adapter(store.quantized["u"], params["lora"])
+    got = jax.tree_util.tree_leaves(fresh)
+    want = jax.tree_util.tree_leaves(direct)
+    old = jax.tree_util.tree_leaves(stale)
+    assert all(np.array_equal(g, w) for g, w in zip(got, want))
+    assert not all(np.array_equal(g, o) for g, o in zip(got, old))
+
+
+def test_register_many_bucketed_onboarding_equivalence(tiny_model):
+    """Cross-adapter bucketed onboarding (one quantize_lora_stacks dispatch
+    per leaf shape) must produce the same quantized adapters as registering
+    each tree on its own."""
+    cfg, model, params = tiny_model
+    trees = {f"u{i}": random_trained_lora(params["lora"],
+                                          jax.random.PRNGKey(70 + i))
+             for i in range(3)}
+    one_by_one = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for k, v in trees.items():
+        one_by_one.register(k, v)
+    bucketed = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    bucketed.register_many(trees)
+    assert set(bucketed.quantized) == set(one_by_one.quantized)
+    for k in trees:
+        qa, qb = one_by_one.quantized[k], bucketed.quantized[k]
+        assert set(qa.entries) == set(qb.entries)
+        for path in qa.entries:
+            for x, y in zip(qa.entries[path], qb.entries[path]):
+                assert (x.h, x.rank) == (y.h, y.rank)
+                np.testing.assert_array_equal(np.asarray(x.a_high.codes),
+                                              np.asarray(y.a_high.codes))
+                np.testing.assert_array_equal(np.asarray(x.b_high.codes),
+                                              np.asarray(y.b_high.codes))
+                np.testing.assert_allclose(np.asarray(x.a_high.scale),
+                                           np.asarray(y.a_high.scale),
+                                           rtol=1e-6, atol=0)
+
+
 def test_train_driver_smoke(tmp_path):
     from repro.launch.train import main
 
