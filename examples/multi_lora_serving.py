@@ -1,7 +1,7 @@
 """Multi-LoRA serving: many users' adapters resident in quantized form,
-onboarded in one bucketed dispatch, and decoded as ONE heterogeneous batch
-straight from packed codes (fused SGMV on every LoRA linear — no adapter is
-ever dequantized; see docs/serving.md).
+onboarded in one bucketed dispatch, and served by the continuous-batching
+scheduler straight from packed codes (fused SGMV on every LoRA linear — no
+adapter is ever dequantized; see docs/serving.md).
 
     PYTHONPATH=src python examples/multi_lora_serving.py
 """
@@ -60,8 +60,10 @@ def onboarding_demo():
 if __name__ == "__main__":
     kernel_demo()
     onboarding_demo()
-    # End-to-end packed serving: a single mixed-adapter batch decoded
-    # straight from packed codes (swap --mode materialize for the fp-LRU
-    # reference segment loop).
+    # End-to-end continuous serving: the step-based scheduler admits every
+    # request into a batch row, decodes straight from packed codes, and
+    # retires rows as they finish (swap --mode packed for the static
+    # one-batch path, or --mode materialize for the fp-LRU segment loop).
     serve_main(["--arch", "llama3.2-3b", "--adapters", "4", "--requests", "8",
-                "--prompt-len", "16", "--max-new", "4", "--mode", "packed"])
+                "--prompt-len", "16", "--max-new", "4",
+                "--mode", "continuous", "--max-rows", "4"])

@@ -27,8 +27,10 @@ Two kernel families:
 * **two-pass** (``matmul_rhs`` / ``matmul_out``, ``sgmv_rhs`` / ``sgmv_out``)
   — the reference path: one ``pallas_call`` per factor, the rank-R
   intermediate ``h`` round-trips through HBM between them, and ``x`` is read
-  from HBM once per sub-LoRA side. Restricted to dense uint8 packing
-  (bits ∈ {1, 2, 4, 8}) whose per-group word count is exactly g/per.
+  from HBM once per sub-LoRA side. Uses the same group-aware unpack as the
+  fused path, so every bit-width the fused kernels serve (incl. 3-bit
+  uint32 packing) has a two-pass reference; pass ``group`` explicitly for
+  3-bit (the dense uint8 widths infer it from the code/scale shapes).
 * **fused single-pass** (``fused_lora`` / ``sgmv_fused``) — ONE
   ``pallas_call`` per layer. Per token tile the kernel unpacks + dequants
   A-high/A-low tiles in VMEM, accumulates ``h_hi``/``h_lo`` in fp32 VMEM
@@ -43,8 +45,9 @@ Fused-path layout/VMEM contract: K tiles must be a multiple of the A-side
 quant group (so per-tile scale blocks are exact — ops.py's ``_pick_tile``
 guarantees it); the full packed B factors and one (Tt, M) output tile stay
 VMEM-resident (≈ 5.5 MB worst case at Tt=128/M=8192 — the full budget
-table is in ``docs/packed_format.md``). For M beyond ~16k lanes, drop
-``tile_t`` or fall back to the two-pass path.
+table is in ``docs/packed_format.md``). For M beyond ~16k lanes the apply
+wrapper (``ops.lora_apply_quantized``) estimates the per-step VMEM and
+auto-falls back to the two-pass path instead of failing at compile time.
 """
 
 from __future__ import annotations
@@ -72,27 +75,15 @@ def _record_launch(name: str) -> None:
     LAUNCH_COUNTS[name] += 1
 
 
-def _unpack_dequant(codes, scale, zero, bits: int):
-    """codes (R, C) uint8 → fp32 (R, C·per) with per-group scales applied.
-
-    Bit-unpack: ``per`` lane-shift planes stacked on a new minor axis then
-    collapsed — the collapse keeps the little-endian in-byte order so the
-    output column order equals the logical weight order.
-    """
-    per = 8 // bits
-    mask = (1 << bits) - 1
-    w = codes.astype(jnp.int32)
-    planes = [(w >> (bits * i)) & mask for i in range(per)]
-    q = jnp.stack(planes, axis=-1)                    # (R, C, per)
-    r, c = w.shape
-    q = q.reshape(r, c * per).astype(jnp.float32)     # (R, K)
-    g = q.shape[1] // scale.shape[1]                  # group size
-    s_full = jnp.broadcast_to(scale[:, :, None], scale.shape + (g,)).reshape(r, -1)
-    if zero is None:                                  # binary: {0,1} → ±scale
-        return s_full * (q * 2.0 - 1.0)
-    z_full = jnp.broadcast_to(
-        zero.astype(jnp.float32)[:, :, None], zero.shape + (g,)).reshape(r, -1)
-    return s_full * (q - z_full)
+def _infer_group(codes, scale, bits: int, group: Optional[int]) -> int:
+    """Dense uint8 widths carry exactly ``8/bits`` codes per word, so the
+    group size follows from the word/group shape ratio; 3-bit uint32 packing
+    (10 codes/word, per-group padding) must pass ``group`` explicitly."""
+    if group is not None:
+        return group
+    if bits == 3:
+        raise ValueError("3-bit packing needs an explicit quant group size")
+    return codes.shape[-1] // scale.shape[-1] * (8 // bits)
 
 
 def _unpack_dequant_grouped(codes, scale, zero, bits: int, group: int):
@@ -125,11 +116,11 @@ def _unpack_dequant_grouped(codes, scale, zero, bits: int, group: int):
 # --------------------------------------------------------------------------
 
 def _matmul_rhs_kernel(x_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
-                       bits: int, binary: bool):
+                       bits: int, binary: bool, group: int):
     nj = pl.program_id(1)
-    w = _unpack_dequant(
+    w = _unpack_dequant_grouped(
         codes_ref[...], scale_ref[...],
-        None if binary else zero_ref[...], bits)      # (R, Kt)
+        None if binary else zero_ref[...], bits, group)   # (R, Kt)
     part = jnp.dot(x_ref[...].astype(jnp.float32), w.T,
                    preferred_element_type=jnp.float32)  # (Tt, R)
 
@@ -143,26 +134,30 @@ def _matmul_rhs_kernel(x_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
 
 
 def matmul_rhs(x, codes, scale, zero, *, bits: int, binary: bool,
+               group: Optional[int] = None,
                tile_t: int = 128, tile_k: int = 512, interpret: bool = False):
-    """x (T, K) @ dequant(codes...)ᵀ → (T, R) fp32. K % tile_k == 0 required
-    (ops.py guarantees by construction: K is a d_model-like multiple of 128).
-    """
+    """x (T, K) @ dequant(codes...)ᵀ → (T, R) fp32. K % tile_k == 0 and
+    tile_k % group == 0 required (ops.py guarantees both by construction:
+    K is a d_model-like multiple of 128 and ``_pick_tile`` aligns tiles to
+    quant groups)."""
     t, k = x.shape
     r = codes.shape[0]
-    per = 8 // bits
     tile_t = min(tile_t, t)
     tile_k = min(tile_k, k)
+    group = _infer_group(codes, scale, bits, group)
     grid = (t // tile_t, k // tile_k)
     g_per_tile = scale.shape[1] // grid[1]
+    wpg = codes.shape[1] // scale.shape[1]            # storage words per group
 
-    kern = functools.partial(_matmul_rhs_kernel, bits=bits, binary=binary)
+    kern = functools.partial(_matmul_rhs_kernel, bits=bits, binary=binary,
+                             group=group)
     _record_launch("matmul_rhs")
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_t, tile_k), lambda i, j: (i, j)),
-            pl.BlockSpec((r, tile_k // per), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile * wpg), lambda i, j: (0, j)),
             pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
             pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
         ],
@@ -177,38 +172,43 @@ def matmul_rhs(x, codes, scale, zero, *, bits: int, binary: bool,
 # --------------------------------------------------------------------------
 
 def _matmul_out_kernel(h_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
-                       bits: int, binary: bool):
-    w = _unpack_dequant(
+                       bits: int, binary: bool, group: int):
+    w = _unpack_dequant_grouped(
         codes_ref[...], scale_ref[...],
-        None if binary else zero_ref[...], bits)      # (R, Mt)
+        None if binary else zero_ref[...], bits, group)   # (R, Mt)
     o_ref[...] = jnp.dot(h_ref[...].astype(jnp.float32), w,
                          preferred_element_type=jnp.float32)
 
 
 def matmul_out(h, codes, scale, zero, *, bits: int, binary: bool,
+               group: Optional[int] = None,
                tile_t: int = 128, tile_m: int = 512, interpret: bool = False):
-    """h (T, R) @ dequant(codes: (R, M))ᵀ-free → (T, M) fp32."""
+    """h (T, R) @ dequant(codes: (R, M))ᵀ-free → (T, Mp) fp32, where
+    ``Mp = n_groups · group`` (== M except when the last quant group is
+    padded, e.g. under 3-bit packing — callers slice ``[:, :m]``)."""
     t, r = h.shape
-    per = 8 // bits
-    m = codes.shape[1] * per
+    group = _infer_group(codes, scale, bits, group)
+    mp = scale.shape[1] * group
     tile_t = min(tile_t, t)
-    tile_m = min(tile_m, m)
-    grid = (t // tile_t, m // tile_m)
+    tile_m = min(tile_m, mp)
+    grid = (t // tile_t, mp // tile_m)
     g_per_tile = scale.shape[1] // grid[1]
+    wpg = codes.shape[1] // scale.shape[1]
 
-    kern = functools.partial(_matmul_out_kernel, bits=bits, binary=binary)
+    kern = functools.partial(_matmul_out_kernel, bits=bits, binary=binary,
+                             group=group)
     _record_launch("matmul_out")
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_t, r), lambda i, j: (i, 0)),
-            pl.BlockSpec((r, tile_m // per), lambda i, j: (0, j)),
+            pl.BlockSpec((r, g_per_tile * wpg), lambda i, j: (0, j)),
             pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
             pl.BlockSpec((r, g_per_tile), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((tile_t, tile_m), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((t, m), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((t, mp), jnp.float32),
         interpret=interpret,
     )(h, codes, scale, zero)
 
@@ -218,32 +218,34 @@ def matmul_out(h, codes, scale, zero, *, bits: int, binary: bool,
 # --------------------------------------------------------------------------
 
 def _sgmv_kernel(seg_map_ref, x_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
-                 bits: int, binary: bool):
-    w = _unpack_dequant(
+                 bits: int, binary: bool, group: int, k: int):
+    w = _unpack_dequant_grouped(
         codes_ref[0], scale_ref[0],
-        None if binary else zero_ref[0], bits)        # (R, K)
-    o_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32), w.T,
+        None if binary else zero_ref[0], bits, group)  # (R, ≥K)
+    o_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32), w[:, :k].T,
                          preferred_element_type=jnp.float32)
 
 
 def sgmv_rhs(x, codes, scale, zero, seg_map, *, bits: int, binary: bool,
+             group: Optional[int] = None,
              tile_t: int = 8, interpret: bool = False):
     """Segment-gathered h = x @ Aᵀ with per-tile adapters.
 
-    x (T, K); codes (NA, R, K/per); seg_map (T/tile_t,) int32 — adapter id of
+    x (T, K); codes (NA, R, words); seg_map (T/tile_t,) int32 — adapter id of
     each token tile (host-side bucketing pads segments to tile multiples).
     """
     t, k = x.shape
     na, r, _ = codes.shape
-    per = 8 // bits
+    group = _infer_group(codes, scale, bits, group)
     grid = (t // tile_t,)
 
-    kern = functools.partial(_sgmv_kernel, bits=bits, binary=binary)
+    kern = functools.partial(_sgmv_kernel, bits=bits, binary=binary,
+                             group=group, k=k)
     grid_spec = pl.GridSpec(
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_t, k), lambda i, seg: (i, 0)),
-            pl.BlockSpec((1, r, k // per), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, r, codes.shape[2]), lambda i, seg: (seg[i], 0, 0)),
             pl.BlockSpec((1, r, scale.shape[2]), lambda i, seg: (seg[i], 0, 0)),
             pl.BlockSpec((1, r, zero.shape[2]), lambda i, seg: (seg[i], 0, 0)),
         ],
@@ -259,26 +261,30 @@ def sgmv_rhs(x, codes, scale, zero, seg_map, *, bits: int, binary: bool,
 
 
 def _sgmv_out_kernel(seg_map_ref, h_ref, codes_ref, scale_ref, zero_ref,
-                     o_ref, *, bits: int, binary: bool):
-    w = _unpack_dequant(
+                     o_ref, *, bits: int, binary: bool, group: int, m: int):
+    w = _unpack_dequant_grouped(
         codes_ref[0], scale_ref[0],
-        None if binary else zero_ref[0], bits)        # (R, M)
-    o_ref[...] = jnp.dot(h_ref[...].astype(jnp.float32), w,
+        None if binary else zero_ref[0], bits, group)  # (R, ≥M)
+    o_ref[...] = jnp.dot(h_ref[...].astype(jnp.float32), w[:, :m],
                          preferred_element_type=jnp.float32)
 
 
 def sgmv_out(h, codes, scale, zero, seg_map, *, bits: int, binary: bool,
+             group: Optional[int] = None, m: Optional[int] = None,
              tile_t: int = 8, interpret: bool = False):
     """Segment-gathered y = h @ dequant(Bᵀ) with per-tile adapters.
 
-    h (T, R); codes (NA, R, M/per); seg_map (T/tile_t,)."""
+    h (T, R); codes (NA, R, words); seg_map (T/tile_t,). ``m`` overrides the
+    output width when the last quant group of B is padded."""
     t, r = h.shape
     na = codes.shape[0]
-    per = 8 // bits
-    m = codes.shape[2] * per
+    group = _infer_group(codes, scale, bits, group)
+    if m is None:
+        m = scale.shape[2] * group
     grid = (t // tile_t,)
 
-    kern = functools.partial(_sgmv_out_kernel, bits=bits, binary=binary)
+    kern = functools.partial(_sgmv_out_kernel, bits=bits, binary=binary,
+                             group=group, m=m)
     grid_spec = pl.GridSpec(
         grid=grid,
         in_specs=[

@@ -28,6 +28,38 @@ from .kernel import fused_lora, matmul_out, matmul_rhs, sgmv_fused, sgmv_rhs
 SUBLANE = 8
 TILE_CAP = 2048          # max feature-tile lanes considered per kernel step
 
+# VMEM the fused single-pass kernel may budget for per grid step. Real TPU
+# cores have ~16 MB of VMEM; leaving headroom for double-buffered DMA and
+# the compiler's own scratch, the fused path auto-falls back to two-pass
+# when its estimate exceeds this (see _fused_vmem_estimate).
+FUSED_VMEM_BUDGET = 12 << 20
+
+
+def _fused_vmem_estimate(qlora: QuantizedLoRA, tile_t: int, tile_k: int) -> int:
+    """Bytes the fused kernel keeps VMEM-resident in one grid step: the x
+    and A-side K tiles, the FULL packed B factors plus their fp32
+    dequantized forms (B is held resident via constant index maps and
+    dequantized whole on the last K step), the (tile_t, M) output tile, and
+    the fp32 h scratch accumulators. Deliberately an upper-bound-ish
+    estimate — crossing it means "don't try to compile this fused"."""
+    k = qlora.a_high.orig_shape[1]
+    m = qlora.b_high.orig_shape[0]
+    a_sides = [qlora.a_high] + ([qlora.a_low] if qlora.a_low is not None else [])
+    b_sides = [qlora.b_high] + ([qlora.b_low] if qlora.b_low is not None else [])
+
+    def packed_bytes(q):
+        return (q.codes.size * q.codes.dtype.itemsize
+                + q.scale.size * 4 + q.zero.size * 4)
+
+    est = tile_t * tile_k * 4 + tile_t * m * 4        # x tile + output tile
+    for q in a_sides:
+        est += packed_bytes(q) * tile_k // max(k, 1)  # A-side K tile
+        est += tile_t * q.scale.shape[0] * 4          # h scratch row
+    for q in b_sides:
+        est += packed_bytes(q)                        # full packed B
+        est += q.scale.shape[0] * m * 4               # dequantized B (fp32)
+    return est
+
 
 def _pick_tile(n: int, group: int, cap: int = TILE_CAP) -> int:
     """Largest tile ≤ cap that divides ``n`` and is a multiple of the quant
@@ -83,37 +115,34 @@ def quant_matmul_rhs(x, codes, scale, zero, *, bits, binary, interpret=True,
                       tile_t=tile_t, tile_k=tile_k, interpret=interpret)
 
 
-def _check_two_pass_bits(q: QuantizedTensor):
-    if q.bits == 3:
-        raise ValueError(
-            "two-pass kernels only support dense uint8 packing (bits ∈ "
-            "{1, 2, 4, 8}); 3-bit uint32 packing needs the fused path "
-            "(fused=True, the default)")
-
-
 def _side(x, q: QuantizedTensor, interpret, tile_t):
-    _check_two_pass_bits(q)
     codes, scale, zero, r = _kernel_layout(q)
     binary = q.mode == "binary"
     k = x.shape[1]
     tile_k = _pick_tile(k, q.group_size)
     h = matmul_rhs(x, codes, scale, zero, bits=q.bits, binary=binary,
-                   tile_t=tile_t, tile_k=tile_k, interpret=interpret)
+                   group=q.group_size, tile_t=tile_t, tile_k=tile_k,
+                   interpret=interpret)
     return h, r
 
 
+def _quant_m(q: QuantizedTensor) -> int:
+    """Logical output width of a B factor, whether stored column-grouped
+    ``(M, R)`` (axis=0) or as the transposed row-grouped ``(R, M)`` view."""
+    return q.orig_shape[0] if q.axis == 0 else q.orig_shape[1]
+
+
 def _out_side(h, q: QuantizedTensor, interpret, tile_t):
-    _check_two_pass_bits(q)
     codes, scale, zero, r = _kernel_layout(q)
     if h.shape[1] != codes.shape[0]:
         h = jnp.pad(h, ((0, 0), (0, codes.shape[0] - h.shape[1])))
     binary = q.mode == "binary"
-    per = 8 // q.bits
-    m = codes.shape[1] * per
-    tile_m = _pick_tile(m, q.group_size)
-    return matmul_out(h, codes, scale, zero, bits=q.bits, binary=binary,
-                      tile_t=tile_t, tile_m=tile_m,
-                      interpret=interpret)
+    mp = scale.shape[1] * q.group_size     # group-padded width (== M unless
+    tile_m = _pick_tile(mp, q.group_size)  # the last group is padded)
+    y = matmul_out(h, codes, scale, zero, bits=q.bits, binary=binary,
+                   group=q.group_size, tile_t=tile_t, tile_m=tile_m,
+                   interpret=interpret)
+    return y[:, : _quant_m(q)]
 
 
 def _fused_apply(x, qlora: QuantizedLoRA, interpret, tile_t) -> jax.Array:
@@ -154,6 +183,7 @@ def lora_apply_quantized(
     interpret: bool = True,
     tile_t: int = 128,
     fused: bool = True,
+    vmem_budget: Optional[int] = None,
 ) -> jax.Array:
     """Packed-LoRA application: high (RTN) + low (binary) sub-LoRAs.
 
@@ -161,13 +191,23 @@ def lora_apply_quantized(
     consumed as their transposed row-grouped buffers directly — zero-copy).
 
     ``fused=True`` (default) issues exactly ONE ``pallas_call``: the (T, R)
-    intermediates stay in VMEM scratch and ``x`` crosses HBM once. This path
-    also supports 3-bit uint32 packing. ``fused=False`` is the two-pass
-    reference (up to four ``pallas_call``s, ``h`` round-trips through HBM),
-    kept for A/B validation and for dense-uint8-only comparisons.
+    intermediates stay in VMEM scratch and ``x`` crosses HBM once. Because
+    the fused kernel holds one (tile_t, M) output tile plus the full packed
+    B factors in VMEM, very wide outputs can exceed the per-step VMEM
+    budget — when :func:`_fused_vmem_estimate` crosses ``vmem_budget``
+    (default :data:`FUSED_VMEM_BUDGET`) the call silently degrades to the
+    two-pass path instead of failing at compile time. ``fused=False`` forces
+    the two-pass reference (up to four ``pallas_call``s, ``h`` round-trips
+    through HBM), which covers every bit-width the fused path does (incl.
+    3-bit uint32 packing).
     """
     xp, t = _pad_tokens(x, min(tile_t, max(x.shape[0], 1)))
     tt = min(tile_t, xp.shape[0])
+    if fused:
+        budget = FUSED_VMEM_BUDGET if vmem_budget is None else vmem_budget
+        tk = _pick_tile(x.shape[1], qlora.a_high.group_size)
+        if _fused_vmem_estimate(qlora, tt, tk) > budget:
+            fused = False                 # large-M guard: two-pass fallback
     if fused:
         y = _fused_apply(xp, qlora, interpret, tt)
         return (scaling * y[:t]).astype(x.dtype)
@@ -225,13 +265,12 @@ def sgmv_apply(
             group_b=qbts[0].group_size,
             tile_t=tile_t, interpret=interpret)
         return (scaling * y).astype(x.dtype)
-    _check_two_pass_bits(qas[0])
-    _check_two_pass_bits(qbts[0])
     h = sgmv_rhs(x, a_codes, a_scale, a_zero, seg_map,
                  bits=qas[0].bits, binary=qas[0].mode == "binary",
-                 tile_t=tile_t, interpret=interpret)
+                 group=qas[0].group_size, tile_t=tile_t, interpret=interpret)
     y = sgmv_out(h, b_codes, b_scale, b_zero, seg_map,
                  bits=qbts[0].bits, binary=qbts[0].mode == "binary",
+                 group=qbts[0].group_size, m=_quant_m(qbts[0]),
                  tile_t=tile_t, interpret=interpret)
     return (scaling * y).astype(x.dtype)
 

@@ -1,5 +1,6 @@
 """Multi-LoRA serving driver: register N quantized adapters, run batched
-heterogeneous requests, report quality/memory/throughput.
+heterogeneous requests through the continuous-batching scheduler (or the
+static reference modes), report quality/memory/throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
         --adapters 8 --requests 32 --variant 2@0.9
@@ -60,11 +61,15 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--variant", default="2@0.9")
-    p.add_argument("--mode", default="packed",
-                   choices=("packed", "materialize"),
-                   help="packed: heterogeneous batch straight from packed "
-                        "codes (fused SGMV); materialize: per-adapter "
-                        "segment loop over dequantized fp trees")
+    p.add_argument("--mode", default="continuous",
+                   choices=("continuous", "packed", "materialize"),
+                   help="continuous: step-based scheduler (mid-decode "
+                        "admission, per-row positions) straight from packed "
+                        "codes; packed: one static heterogeneous batch; "
+                        "materialize: per-adapter segment loop over "
+                        "dequantized fp trees")
+    p.add_argument("--max-rows", type=int, default=8,
+                   help="decode batch rows owned by the continuous scheduler")
     p.add_argument("--no-quant", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -92,7 +97,7 @@ def main(argv=None):
           f"store stats: {store.stats()}")
 
     engine = MultiLoRAEngine(model, params, store, cache_capacity=128,
-                             mode=args.mode)
+                             mode=args.mode, max_rows=args.max_rows)
     drng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(

@@ -2,9 +2,21 @@
 DeepSeek-V3 MLA (multi-head latent attention) with compressed KV caching.
 
 All functions operate on one layer's params and support two modes:
-* sequence mode (train/prefill): ``x: (B, T, d)``, causal (+window) mask;
+* sequence mode (train/prefill): ``x: (B, T, d)``, causal (+window) mask,
+  optionally pad-masked via ``pad_mask: (B, T)`` (True = real token) so
+  left-padded mixed-length batches never attend to pad slots;
 * decode mode: ``x: (B, 1, d)`` with a fixed-capacity cache updated in place
-  at ``cache_pos`` via ``dynamic_update_slice``.
+  at per-row ``cache_pos: (B,)`` (a scalar broadcasts). ``valid_start: (B,)``
+  marks each row's first real (non-pad) cache index: slots holding pad
+  tokens — or stale entries from a retired request that previously occupied
+  the row — are masked out of the softmax.
+
+The position/mask contract (``docs/serving.md``): ``cache_pos`` counts in
+*padded* sequence indices (cache slot space); rotary ``positions`` count in
+*real* token positions (``padded index - valid_start``). Because every row
+is left-padded by a constant, index order equals position order, so the
+causal/window masks stay index-based and exactness only needs the pad slots
+masked as keys.
 
 Weights are ``(in, out)``; LoRA trees mirror the projection names
 (see ``models/common.linear``).
@@ -63,6 +75,14 @@ def _causal_window_mask(t_q: int, t_kv: int, offset: int, window: Optional[int])
     return jnp.where(ok, 0.0, NEG_INF)
 
 
+def _pad_key_mask(pad_mask, extra_dims: int):
+    """(B, S) bool validity (True = real token) → additive (B, 1, ..., 1, S)
+    mask with ``extra_dims`` unit axes, broadcastable over attention scores
+    whose leading axis is batch and trailing axis is the key dim."""
+    m = jnp.where(pad_mask, 0.0, NEG_INF)
+    return m.reshape(m.shape[0], *([1] * extra_dims), m.shape[1])
+
+
 def _sdpa(q, k, v, mask, cap: Optional[float]):
     """q: (B,T,H,dh), k/v: (B,S,KV,dh) with H = KV*G. fp32 softmax."""
     b, t, h, dh = q.shape
@@ -84,7 +104,7 @@ KV_CHUNK = 1024
 
 
 def _sdpa_blockwise(q, k, v, offset: int, window, cap, unroll=False,
-                    chunk: int = KV_CHUNK):
+                    chunk: int = KV_CHUNK, pad_mask=None):
     """Flash-attention-style blockwise SDPA in pure JAX: ``lax.scan`` over KV
     chunks with an online softmax (running max/denominator). Peak memory is
     O(B·H·T·chunk) instead of O(B·H·T·S) — this is what lets the 32k-prefill
@@ -104,10 +124,17 @@ def _sdpa_blockwise(q, k, v, offset: int, window, cap, unroll=False,
     vc = v.reshape(b, nchunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
     qpos = jnp.arange(t) + offset
     scale = 1.0 / np.sqrt(dh)
+    has_pad_mask = pad_mask is not None
+    if has_pad_mask:
+        pm = jnp.pad(pad_mask, ((0, 0), (0, pad))) if pad else pad_mask
+        pmc = pm.reshape(b, nchunks, chunk).transpose(1, 0, 2)  # (NC, B, chunk)
+        xs = (jnp.arange(nchunks), kc, vc, pmc)
+    else:
+        xs = (jnp.arange(nchunks), kc, vc)
 
     def body(carry, inp):
         m, den, acc = carry
-        ci, kci, vci = inp
+        ci, kci, vci = inp[:3]
         scores = jnp.einsum("btkgd,bskd->bkgts", q5, kci.astype(jnp.float32))
         scores = scores * scale
         if cap is not None:
@@ -118,7 +145,11 @@ def _sdpa_blockwise(q, k, v, offset: int, window, cap, unroll=False,
             ok &= kpos[None, :] > qpos[:, None] - window
         if pad:
             ok &= (kpos < s)[None, :]
-        scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+        if has_pad_mask:                                 # (B, t, chunk)
+            okb = ok[None] & inp[3][:, None, :]
+            scores = jnp.where(okb[:, None, None], scores, NEG_INF)
+        else:
+            scores = jnp.where(ok[None, None, None], scores, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(scores - m_new[..., None])
@@ -131,7 +162,7 @@ def _sdpa_blockwise(q, k, v, offset: int, window, cap, unroll=False,
     d0 = jnp.zeros((b, kvh, g, t), jnp.float32)
     a0 = jnp.zeros((b, kvh, g, t, dh), jnp.float32)
     (m, den, acc), _ = jax.lax.scan(
-        body, (m0, d0, a0), (jnp.arange(nchunks), kc, vc), unroll=unroll)
+        body, (m0, d0, a0), xs, unroll=unroll)
     out = acc / jnp.maximum(den, 1e-30)[..., None]
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, t, h * dh)
     return out.astype(q.dtype)
@@ -146,7 +177,9 @@ def gqa_attention(
     positions: jax.Array,                 # (B, T) or (3, B, T) for mrope
     window: Optional[int] = None,
     cache: Optional[Params] = None,       # {"k","v"}: (B, S, KV, dh)
-    cache_pos: Optional[jax.Array] = None,
+    cache_pos: Optional[jax.Array] = None,  # scalar or (B,) padded index
+    valid_start: Optional[jax.Array] = None,  # (B,) first real cache index
+    pad_mask: Optional[jax.Array] = None,     # (B, T) True = real token
     scaling: float = 2.0,
     unroll: bool = False,
     force_blockwise: Optional[bool] = None,
@@ -176,37 +209,50 @@ def gqa_attention(
     if cache is None:
         if use_blockwise:
             out = _sdpa_blockwise(q, k, v, 0, window, cfg.attn_softcap,
-                                  unroll=unroll, chunk=kv_chunk)
+                                  unroll=unroll, chunk=kv_chunk,
+                                  pad_mask=pad_mask)
         else:
             mask = _causal_window_mask(t, t, 0, window)
+            if pad_mask is not None:
+                mask = mask + _pad_key_mask(pad_mask, 3)
             out = _sdpa(q, k, v, mask, cfg.attn_softcap)
         new_cache = None
     elif t == 1:
         # decode: the cache is a ring buffer of ``cap`` slots (cap == window
-        # for local attention, cap == max-seq for global). Slot s holds the
-        # newest absolute position p' ≤ pos with p' ≡ s (mod cap); validity
-        # and causality reduce to p' ≥ 0, and the window constraint is free
-        # because cap ≤ window by construction.
+        # for local attention, cap == max-seq for global). Per row, slot s
+        # holds the newest padded index p' ≤ pos with p' ≡ s (mod cap);
+        # validity and causality reduce to p' ≥ valid_start (pad slots below
+        # valid_start, and stale slots from a previous occupant of the row —
+        # which resolve to p' < 0 — are masked), and the window constraint
+        # is free because cap ≤ window by construction.
         cap = cache["k"].shape[1]
-        slot = jnp.mod(cache_pos, cap)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        pos_b = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+        start_b = (jnp.zeros((b,), jnp.int32) if valid_start is None
+                   else jnp.broadcast_to(
+                       jnp.asarray(valid_start, jnp.int32).reshape(-1), (b,)))
+        slot = jnp.mod(pos_b, cap)
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
         s_idx = jnp.arange(cap)
-        abs_pos = cache_pos - jnp.mod(cache_pos - s_idx, cap)
-        mask = jnp.where(abs_pos >= 0, 0.0, NEG_INF)[None, :]
+        abs_pos = pos_b[:, None] - jnp.mod(pos_b[:, None] - s_idx[None, :], cap)
+        mask = _pad_key_mask(abs_pos >= start_b[:, None], 3)
         out = _sdpa(q, ck, cv, mask, cfg.attn_softcap)
         new_cache = {"k": ck, "v": cv}
     else:
         # stateful prefill from position 0: sequence attention + cache fill
-        # with the last min(T, cap) tokens at their ring slots.
+        # with the last min(T, cap) tokens at their ring slots. Pad slots are
+        # written too — decode masks them via valid_start.
         cap = cache["k"].shape[1]
         if use_blockwise:
             out = _sdpa_blockwise(q, k, v, 0, window, cfg.attn_softcap,
-                                  unroll=unroll, chunk=kv_chunk)
+                                  unroll=unroll, chunk=kv_chunk,
+                                  pad_mask=pad_mask)
         else:
             mask = _causal_window_mask(t, t, 0, window)
+            if pad_mask is not None:
+                mask = mask + _pad_key_mask(pad_mask, 3)
             out = _sdpa(q, k, v, mask, cfg.attn_softcap)
         keep = min(t, cap)
         # contiguous-modulo ring fill via static dynamic-update-slices (a
@@ -273,7 +319,9 @@ def mla_attention(
     *,
     positions: jax.Array,
     cache: Optional[Params] = None,   # {"c": (B,S,kv_rank), "kr": (B,S,rope_dim)}
-    cache_pos: Optional[jax.Array] = None,
+    cache_pos: Optional[jax.Array] = None,  # scalar or (B,) padded index
+    valid_start: Optional[jax.Array] = None,  # (B,) first real cache index
+    pad_mask: Optional[jax.Array] = None,     # (B, T) True = real token
     scaling: float = 2.0,
     unroll: bool = False,
     force_blockwise: Optional[bool] = None,
@@ -318,10 +366,13 @@ def mla_attention(
         if use_blockwise:
             vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nd + rd - vd)))
             out = _sdpa_blockwise(qfull, kfull, vp, 0, None, None,
-                                  unroll=unroll, chunk=kv_chunk)
+                                  unroll=unroll, chunk=kv_chunk,
+                                  pad_mask=pad_mask)
             out = out.reshape(b, t, h, nd + rd)[..., :vd]
         else:
             mask = _causal_window_mask(t, t, 0, None)
+            if pad_mask is not None:
+                mask = mask + _pad_key_mask(pad_mask, 2)
             scores = jnp.einsum("bthd,bshd->bhts", qfull, kfull)
             scores = scores.astype(jnp.float32) / np.sqrt(nd + rd)
             probs = jax.nn.softmax(scores + mask, axis=-1).astype(v.dtype)
@@ -336,9 +387,21 @@ def mla_attention(
             ckr = cache["kr"].at[:, :keep].set(kr[:, t - keep:].astype(cache["kr"].dtype))
             new_cache = {"c": cc, "kr": ckr}
     else:
-        # decode mode: absorbed MLA — attend in the compressed space.
-        cc = jax.lax.dynamic_update_slice(cache["c"], c.astype(cache["c"].dtype), (0, cache_pos, 0))
-        ckr = jax.lax.dynamic_update_slice(cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        # decode mode: absorbed MLA — attend in the compressed space. The
+        # MLA cache is linear (slot index == padded index), so causality is
+        # ``kpos ≤ cache_pos`` and pad/stale slots are ``kpos < valid_start``.
+        pos_b = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,))
+        start_b = (jnp.zeros((b,), jnp.int32) if valid_start is None
+                   else jnp.broadcast_to(
+                       jnp.asarray(valid_start, jnp.int32).reshape(-1), (b,)))
+        rows = jnp.arange(b)
+        # clamp the write like dynamic_update_slice used to — a row past
+        # capacity keeps overwriting the last slot instead of silently
+        # dropping its newest token (JAX scatter OOB default)
+        wpos = jnp.minimum(pos_b, cache["c"].shape[1] - 1)
+        cc = cache["c"].at[rows, wpos].set(c[:, 0].astype(cache["c"].dtype))
+        ckr = cache["kr"].at[rows, wpos].set(kr[:, 0].astype(cache["kr"].dtype))
         s = cc.shape[1]
         # absorb W_uk into the query: q̃ = q_nope @ W_ukᵀ  → (B, 1, H, kv_rank)
         q_abs = jnp.einsum("bthd,chd->bthc", q_nope, wk_up)
@@ -347,7 +410,8 @@ def mla_attention(
             + jnp.einsum("bthd,bsd->bhts", q_rope, ckr)
         ).astype(jnp.float32) / np.sqrt(nd + rd)
         kpos = jnp.arange(s)
-        mask = jnp.where(kpos <= cache_pos, 0.0, NEG_INF)[None, :]
+        ok = (kpos[None, :] <= pos_b[:, None]) & (kpos[None, :] >= start_b[:, None])
+        mask = _pad_key_mask(ok, 2)
         probs = jax.nn.softmax(scores + mask, axis=-1).astype(cc.dtype)
         ctx = jnp.einsum("bhts,bsc->bthc", probs, cc)      # compressed context
         out = jnp.einsum("bthc,chd->bthd", ctx, wv_up)     # absorb W_uv

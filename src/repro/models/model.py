@@ -220,19 +220,22 @@ class Model:
 
     # ----- sub-block forward -----
 
-    def _run_mixer(self, kind, x, bparams, lparams, *, positions, cache, cache_pos):
+    def _run_mixer(self, kind, x, bparams, lparams, *, positions, cache,
+                   cache_pos, pad_mask=None, valid_start=None):
         cfg = self.cfg
         if kind in ("attn", "local_attn"):
             window = cfg.window if kind == "local_attn" else None
             return attn_mod.gqa_attention(
                 x, bparams, lparams, cfg, positions=positions, window=window,
-                cache=cache, cache_pos=cache_pos, scaling=self.scaling,
+                cache=cache, cache_pos=cache_pos, valid_start=valid_start,
+                pad_mask=pad_mask, scaling=self.scaling,
                 unroll=self.unroll, force_blockwise=self.force_blockwise,
                 kv_chunk=self.kv_chunk)
         if kind == "mla":
             return attn_mod.mla_attention(
                 x, bparams, lparams, cfg, positions=positions,
-                cache=cache, cache_pos=cache_pos, scaling=self.scaling,
+                cache=cache, cache_pos=cache_pos, valid_start=valid_start,
+                pad_mask=pad_mask, scaling=self.scaling,
                 unroll=self.unroll, force_blockwise=self.force_blockwise,
                 kv_chunk=self.kv_chunk)
         if kind == "rglru":
@@ -282,9 +285,15 @@ class Model:
             group_lora,
             is_leaf=lambda n: isinstance(n, PackedLoRABatch))
 
-    def _backbone(self, params, x, positions, caches, cache_pos):
+    def _backbone(self, params, x, positions, caches, cache_pos,
+                  pad_mask=None, valid_start=None):
         """Run all layer groups. ``caches`` is None (sequence mode) or the
-        stacked cache list (decode / stateful mode)."""
+        stacked cache list (decode / stateful mode). ``pad_mask: (B, T)``
+        masks left-pad slots out of attention (sequence/prefill);
+        ``valid_start: (B,)`` masks each row's pad/stale cache slots at
+        decode. Recurrent mixers (rglru/rwkv) ignore both — their states
+        accumulate pad tokens, so only attention architectures are
+        position-exact under left-padding (see docs/serving.md)."""
         cfg = self.cfg
         base, lora = params["base"], params["lora"]
         seg = lora.get("seg") if isinstance(lora, dict) else None
@@ -311,7 +320,8 @@ class Model:
                     hin = apply_norm(h, sb["mixer_norm"], cfg.norm)
                     mix_out, mc_new = self._run_mixer(
                         mk, hin, sb["mixer"], sl["mixer"], positions=positions,
-                        cache=mix_cache, cache_pos=cache_pos)
+                        cache=mix_cache, cache_pos=cache_pos,
+                        pad_mask=pad_mask, valid_start=valid_start)
                     if cfg.post_norm:
                         mix_out = apply_norm(mix_out, sb["post_mixer_norm"], cfg.norm)
                     h = h + mix_out
@@ -442,29 +452,57 @@ class Model:
 
     def prefill(self, params, batch, capacity: int):
         """Sequence forward that also fills decode caches (attention k/v
-        ring buffers, recurrent states). Returns (logits, caches)."""
+        ring buffers, recurrent states). Returns (logits, caches).
+
+        ``batch["start"]`` (optional, ``(B,)`` int32) marks per-row left-pad
+        counts for mixed-length batches: row ``i``'s real tokens occupy
+        padded indices ``start[i]..T-1`` and get positions ``0..len-1``
+        (position-exact vs unpadded serving), while pad slots are masked out
+        of attention entirely. Without it, behavior is the legacy unmasked
+        one (positions = indices, every slot attended)."""
         cfg = self.cfg
         x = self._embed(params["base"], batch)
         b, t = x.shape[0], x.shape[1]
-        positions = self._positions(batch, t, b)
+        pad_mask = None
+        if "start" in batch and "positions" not in batch:
+            start = jnp.asarray(batch["start"], jnp.int32)
+            pos = jnp.arange(t, dtype=jnp.int32)[None, :] - start[:, None]
+            pad_mask = pos >= 0
+            pos = jnp.maximum(pos, 0)         # pads: masked anyway, tame rope
+            if cfg.rope == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, b, t))
+            positions = pos
+        else:
+            positions = self._positions(batch, t, b)
         caches = self.init_cache(b, capacity)
-        h, _, new_caches = self._backbone(params, x, positions, caches, 0)
+        h, _, new_caches = self._backbone(params, x, positions, caches, 0,
+                                          pad_mask=pad_mask)
         return self._logits(params["base"], h), new_caches
 
-    def decode_step(self, params, tokens, caches, pos):
+    def decode_step(self, params, tokens, caches, pos, start=None):
         """One token per sequence. ``tokens: (B, 1)`` (or (B, K, 1) audio);
-        ``pos``: scalar int32 — absolute position. Returns (logits, caches)."""
+        ``pos``: int32 scalar or ``(B,)`` — per-row *padded* cache index of
+        the incoming token; ``start``: optional ``(B,)`` per-row left-pad
+        count (first real cache index). Rotary positions are the real ones,
+        ``pos - start``, and cache slots below ``start`` are masked out of
+        attention. Scalar ``pos`` with ``start=None`` is the legacy
+        homogeneous-batch call. Returns (logits, caches)."""
         cfg = self.cfg
         batch = {"tokens": tokens}
         x = self._embed(params["base"], batch)
         b = x.shape[0]
+        pos_b = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        start_b = (jnp.zeros((b,), jnp.int32) if start is None
+                   else jnp.broadcast_to(
+                       jnp.asarray(start, jnp.int32).reshape(-1), (b,)))
+        rpos = (pos_b - start_b)[:, None]                    # (B, 1) real pos
         if cfg.rope == "mrope":
-            positions = jnp.broadcast_to(
-                jnp.asarray(pos, jnp.int32).reshape(1, 1, 1), (3, b, 1))
+            positions = jnp.broadcast_to(rpos[None], (3, b, 1))
         else:
-            positions = jnp.broadcast_to(
-                jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
-        x, _, new_caches = self._backbone(params, x, positions, caches, pos)
+            positions = rpos
+        x, _, new_caches = self._backbone(params, x, positions, caches, pos_b,
+                                          valid_start=start_b)
         return self._logits(params["base"], x), new_caches
 
 

@@ -13,12 +13,14 @@ Components (full walkthrough in ``docs/serving.md``):
   - **materialize** (:meth:`AdapterStore.materialize`) — dequantized fp LoRA
     trees through a byte-budgeted LRU; the portable reference path.
 
-* :class:`MultiLoRAEngine` — heterogeneous batching over packed codes
-  (``mode="packed"``, default): ALL pending requests run as ONE batch whose
-  per-token adapter segment ids ride through prefill and decode to the SGMV
-  kernel of every LoRA linear. ``mode="materialize"`` keeps the S-LoRA-style
-  per-adapter segment loop (fp tree swapped into the params per segment) as
-  the reference implementation.
+* :class:`MultiLoRAEngine` — a step-based **continuous-batching scheduler**
+  (``mode="continuous"``, default): requests are admitted into free batch
+  rows *mid-decode*, finished rows retire immediately, and per-row adapter
+  segment ids are rebuilt every step so one fixed-shape decode program
+  serves an arbitrarily churning mix of users straight from packed codes.
+  ``mode="packed"`` keeps the static one-shot heterogeneous batch and
+  ``mode="materialize"`` the S-LoRA-style per-adapter segment loop (fp tree
+  swapped into the params per segment) as parity references.
 
 Adapter onboarding is batched across *adapters* as well as layers:
 ``AdapterStore.register_many`` buckets every same-shape LoRA linear of every
@@ -27,13 +29,16 @@ SVD dispatch plus one refine/quantize dispatch per distinct split ``h`` for
 the whole upload batch.
 
 Requests are plain dataclasses; generation is greedy. The engine is
-synchronous by design — wrap ``engine.run()`` in your RPC layer of choice.
+synchronous by design — wrap ``engine.run()`` / ``engine.step()`` in your
+RPC layer of choice.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -148,6 +153,15 @@ def dequantize_adapter(qa: QuantizedAdapter, like_tree) -> Any:
             if set(node.keys()) == {"a", "b"}:
                 qs = flat[path]
                 bs, as_ = zip(*(q.materialize() for q in qs))
+                # SVD reparameterization caps the factor rank at
+                # min(out, r) (e.g. a 4-expert MoE router with rank-16
+                # LoRA); zero-pad the rank dim back to the template —
+                # zero components contribute nothing to BA.
+                r = node["a"].shape[-2]
+                bs = [jnp.pad(b_i, ((0, 0), (0, r - b_i.shape[1])))
+                      for b_i in bs]
+                as_ = [jnp.pad(a_i, ((0, r - a_i.shape[0]), (0, 0)))
+                       for a_i in as_]
                 a = jnp.stack(as_).reshape(node["a"].shape)
                 b = jnp.stack(bs).reshape(node["b"].shape)
                 return {"a": a.astype(node["a"].dtype),
@@ -339,28 +353,56 @@ class Request:
     adapter_id: str
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None        # retire early when this token appears
     output: Optional[np.ndarray] = None
+    t_first: Optional[float] = None     # wall clock of first generated token
+
+
+@dataclasses.dataclass
+class _Row:
+    """One live batch-row slot of the continuous scheduler."""
+
+    req: Request
+    start: int                  # left-pad count (first real cache index)
+    prompt_len: int
+    emitted: List[int]          # generated tokens so far (≥ 1 after prefill)
 
 
 class MultiLoRAEngine:
-    """Batched greedy generation over many users' adapters.
+    """Step-based continuous-batching scheduler over many users' adapters.
 
-    ``mode="packed"`` (default): ONE heterogeneous batch per :meth:`run` —
-    per-token adapter segment ids ride through prefill and decode and every
-    LoRA linear applies the right adapter straight from packed codes via the
-    fused SGMV kernel. No fp LoRA tree is ever allocated (the store's LRU
-    stays empty).
+    ``mode="continuous"`` (default): the engine owns ``max_rows`` batch-row
+    slots backed by one persistent decode cache. :meth:`step` advances every
+    active row by one greedy decode step, admits pending requests into free
+    rows mid-decode (bursts of equal padded length are prefilled as one
+    batch — left-padded only to a ``seg_tile`` multiple — and their caches
+    scattered into the rows' slices in one call),
+    and retires rows the moment they hit ``max_new_tokens`` or ``eos_id``,
+    freeing the slot for the next admission. Per-row cache positions and
+    validity masks make every row position-exact regardless of padding, so
+    a request admitted mid-decode yields exactly the tokens of a solo run.
+    Per-row adapter choice is a per-step rebuild of the SGMV segment ids
+    (``lora["seg"]``) over the store-wide packed stack — row↔adapter
+    swaps are free. :meth:`run` is a loop over :meth:`step`.
 
-    ``mode="materialize"``: the reference S-LoRA-style segment loop —
-    requests grouped by adapter, each segment served with that adapter's
-    dequantized fp tree swapped into the params. Both modes left-pad prompts
-    to the same global ``tmax`` (a multiple of ``seg_tile``), so their
-    outputs match token-for-token.
+    ``mode="packed"``: the static reference — ALL pending requests as ONE
+    heterogeneous left-padded batch, decoded to the longest request.
+
+    ``mode="materialize"``: the S-LoRA-style per-adapter segment loop over
+    dequantized fp trees (the portable reference; also the automatic
+    fallback when the lora tree has leaves packed serving cannot stack,
+    e.g. MoE per-expert adapters).
+
+    All three modes mask pad slots out of attention and use real (unpadded)
+    rotary positions, so their outputs agree token-for-token with each
+    other and with unpadded solo serving (attention architectures; see
+    docs/serving.md for the recurrent-state caveat).
     """
 
     def __init__(self, model, base_params, store: AdapterStore,
-                 cache_capacity: int = 512, mode: str = "packed",
-                 seg_tile: int = 8, interpret: bool = True):
+                 cache_capacity: int = 512, mode: str = "continuous",
+                 seg_tile: int = 8, interpret: bool = True,
+                 max_rows: int = 8):
         self.model = model
         self.params = base_params         # {"base", "lora"(template)}
         self.store = store
@@ -368,10 +410,23 @@ class MultiLoRAEngine:
         self.mode = mode
         self.seg_tile = seg_tile
         self.interpret = interpret
+        self.max_rows = max_rows
         self.pending: List[Request] = []
+        self._rows: List[Optional[_Row]] = [None] * max_rows
+        self._caches = None               # persistent (max_rows)-row caches
+        self._packable: Optional[bool] = None
+        self._warned_fallback = False
+        self._dec_groups = None           # decode-retiled view of _packed_all
+        self._dec_src = None              # the packed tree it was built from
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_capacity))
         self._decode = jax.jit(model.decode_step)
+        # scatter a group's prefilled cache rows into the persistent batch
+        # cache: leaves are (layer_count, B, ...), so row indices land on
+        # axis 1 of every leaf
+        self._scatter_rows = jax.jit(
+            lambda g, r, idx: jax.tree_util.tree_map(
+                lambda gg, rr: gg.at[:, idx].set(rr.astype(gg.dtype)), g, r))
 
     def submit(self, req: Request):
         self.pending.append(req)
@@ -386,29 +441,43 @@ class MultiLoRAEngine:
         t = max(len(r.prompt) for r in reqs)
         return -(-t // self.seg_tile) * self.seg_tile
 
+    # ----- static reference paths (one batch, drained to completion) -----
+
     def _generate(self, params_prefill, params_decode,
                   reqs: Sequence[Request], tmax: int) -> None:
-        """Shared greedy loop: left-pad to ``tmax``, prefill once, decode to
-        the longest request, slice each request's output."""
+        """Shared static greedy loop: left-pad to ``tmax`` (position-exact:
+        per-row ``start`` masks pad slots and shifts rotary positions),
+        prefill once, decode to the longest request, slice each output."""
         toks = np.stack([
             np.pad(r.prompt, (tmax - len(r.prompt), 0))    # left-pad
             for r in reqs
         ]).astype(np.int32)
+        starts = np.asarray([tmax - len(r.prompt) for r in reqs], np.int32)
         logits, caches = self._prefill(params_prefill,
-                                       {"tokens": jnp.asarray(toks)})
+                                       {"tokens": jnp.asarray(toks),
+                                        "start": jnp.asarray(starts)})
         last = jnp.argmax(logits[:, -1, :], axis=-1)
+        now = time.perf_counter()
+        for r in reqs:
+            r.t_first = now
         n_new = max(r.max_new_tokens for r in reqs)
         outs = [last]
-        pos = tmax
-        for _ in range(n_new - 1):
+        start_arr = jnp.asarray(starts)
+        b = len(reqs)
+        for k in range(n_new - 1):
+            pos = jnp.full((b,), tmax + k, jnp.int32)
             logits, caches = self._decode(
-                params_decode, last[:, None], caches, jnp.int32(pos))
+                params_decode, last[:, None], caches, pos, start_arr)
             last = jnp.argmax(logits[:, -1, :], axis=-1)
             outs.append(last)
-            pos += 1
         gen = np.stack([np.asarray(o) for o in outs], axis=1)  # (B, n_new)
         for i, r in enumerate(reqs):
-            r.output = gen[i, : r.max_new_tokens]
+            out = gen[i, : r.max_new_tokens].astype(np.int32)
+            if r.eos_id is not None:
+                hits = np.nonzero(out == r.eos_id)[0]
+                if hits.size:
+                    out = out[: hits[0] + 1]
+            r.output = out
 
     def _run_packed(self, reqs: List[Request]) -> List[Request]:
         """One heterogeneous batch: decode straight from packed codes."""
@@ -439,14 +508,207 @@ class MultiLoRAEngine:
             self._generate(params, params, seg_reqs, tmax)
         return reqs
 
+    # ----- continuous scheduler -----
+
+    def _tree_packable(self) -> bool:
+        """Packed serving needs plain ``(L, r, in)`` layer stacks; leaves
+        with extra lead dims (MoE per-expert adapters) cannot be stacked
+        into a :class:`PackedLoRABatch`."""
+        if self._packable is None:
+            self._packable = all(
+                np.ndim(leaf["a"]) == 3
+                for _, leaf in iter_lora_linears(self.params["lora"]))
+        return self._packable
+
+    def _fallback_mode(self, mode: str) -> str:
+        """Resolve packed-family modes to ``materialize`` (with a one-time
+        warning) when the lora tree cannot be packed."""
+        if mode in ("packed", "continuous") and not self._tree_packable():
+            if not self._warned_fallback:
+                warnings.warn(
+                    "lora tree has {'a','b'} leaves with extra lead dims "
+                    "(e.g. MoE per-expert adapters) that packed serving "
+                    "cannot stack; falling back to mode='materialize'",
+                    stacklevel=3)
+                self._warned_fallback = True
+            return "materialize"
+        return mode
+
+    def _packed_all(self):
+        """Store-wide packed stack + canonical id order (continuous mode
+        packs every registered adapter so the decode program's shapes stay
+        fixed while rows/adapters come and go; codes are quantized, so the
+        whole store is cheap to keep device-resident)."""
+        ids = sorted(self.store.quantized)
+        packed = self.store.pack_batch(ids, self.params["lora"],
+                                       tile_t=self.seg_tile,
+                                       interpret=self.interpret)
+        return ids, packed
+
+    def _tpad(self, req: Request) -> int:
+        return max(self.seg_tile,
+                   -(-len(req.prompt) // self.seg_tile) * self.seg_tile)
+
+    def _admit_group(self, reqs: List[Request], rows: List[int],
+                     ids, packed) -> List[_Row]:
+        """Prefill a group of same-padded-length requests as ONE batch
+        (left-padded to a shared ``seg_tile`` multiple — the group's rows
+        stay independent under the pad-mask contract) and scatter their
+        cache rows into the persistent batch in one call. Batching the
+        admissions amortizes per-dispatch overhead when requests arrive in
+        bursts; a lone arrival is simply a group of one."""
+        tpad = self._tpad(reqs[0])
+        aidx = np.asarray([ids.index(r.adapter_id) for r in reqs], np.int32)
+        starts = np.asarray([tpad - len(r.prompt) for r in reqs], np.int32)
+        toks = np.stack([
+            np.pad(np.asarray(r.prompt), (tpad - len(r.prompt), 0))
+            for r in reqs
+        ]).astype(np.int32)
+        pre = {"base": self.params["base"],
+               "lora": {"groups": packed["groups"],
+                        "seg": jnp.asarray(np.repeat(aidx, tpad))}}
+        logits, grp_caches = self._prefill(
+            pre, {"tokens": jnp.asarray(toks), "start": jnp.asarray(starts)})
+        firsts = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        now = time.perf_counter()
+        self._caches = self._scatter_rows(
+            self._caches, grp_caches, jnp.asarray(np.asarray(rows, np.int32)))
+        out = []
+        for b, (req, row_idx) in enumerate(zip(reqs, rows)):
+            req.t_first = now
+            row = _Row(req=req, start=int(starts[b]),
+                       prompt_len=len(req.prompt), emitted=[int(firsts[b])])
+            self._rows[row_idx] = row
+            out.append(row)
+        return out
+
+    @staticmethod
+    def _row_done(row: _Row) -> bool:
+        r = row.req
+        return (len(row.emitted) >= r.max_new_tokens
+                or (r.eos_id is not None and row.emitted[-1] == r.eos_id))
+
+    def _retire(self, row_idx: int) -> Request:
+        row = self._rows[row_idx]
+        self._rows[row_idx] = None
+        # prefill always seeds one token; cap at the budget so degenerate
+        # max_new_tokens <= 0 requests match the static modes' empty output
+        row.req.output = np.asarray(
+            row.emitted[: max(row.req.max_new_tokens, 0)], np.int32)
+        return row.req
+
+    def step(self) -> List[Request]:
+        """Advance the continuous scheduler by one decode step.
+
+        1. **Admit**: move pending requests into free rows (FIFO; bursts of
+           equal padded length prefill as one batch → cache-row scatter; a
+           request that finishes at admission frees its row for the next
+           pending one immediately).
+        2. **Decode**: one step for the whole fixed-shape batch — per-row
+           cache positions/validity and per-row adapter seg ids; inactive
+           rows run fully masked and are ignored.
+        3. **Retire**: rows hitting ``max_new_tokens``/``eos_id`` free their
+           slot and their request (with ``output`` set) is returned.
+
+        Returns the requests finished during this step, completion-ordered.
+        """
+        if self._fallback_mode("continuous") != "continuous":
+            reqs, self.pending = self.pending, []
+            return self._run_materialize(reqs) if reqs else []
+        finished: List[Request] = []
+        if not self.pending and all(r is None for r in self._rows):
+            return finished
+        ids, packed = self._packed_all()
+        if self._caches is None:
+            self._caches = self.model.init_cache(self.max_rows, self.capacity)
+        # admit FIFO, batching the leading run of equal padded lengths into
+        # one prefill; retiring-at-admission frees rows for the next group
+        while self.pending:
+            free = [i for i in range(self.max_rows) if self._rows[i] is None]
+            if not free:
+                break
+            group = [self.pending[0]]
+            for r in self.pending[1:len(free)]:
+                if self._tpad(r) != self._tpad(group[0]):
+                    break
+                group.append(r)
+            for r in group:                    # validate BEFORE dequeuing so
+                if r.adapter_id not in self.store.quantized:  # pending survives
+                    raise KeyError(
+                        f"request {r.request_id}: adapter {r.adapter_id!r} "
+                        f"is not registered in the AdapterStore")
+            del self.pending[:len(group)]
+            rows = free[:len(group)]
+            for row_idx, row in zip(rows,
+                                    self._admit_group(group, rows, ids, packed)):
+                if self._row_done(row):
+                    finished.append(self._retire(row_idx))
+        active = [i for i in range(self.max_rows) if self._rows[i] is not None]
+        if not active:
+            return finished
+        toks = np.zeros((self.max_rows, 1), np.int32)
+        pos = np.zeros((self.max_rows,), np.int32)
+        # inactive rows: valid_start == capacity masks every cache slot, so
+        # they decode garbage finitely (NEG_INF masking) and touch nothing.
+        start = np.full((self.max_rows,), self.capacity, np.int32)
+        seg = np.zeros((self.max_rows,), np.int32)
+        for i in active:
+            row = self._rows[i]
+            toks[i, 0] = row.emitted[-1]
+            pos[i] = row.start + row.prompt_len + len(row.emitted) - 1
+            start[i] = row.start
+            # resolve the adapter index against the CURRENT id order — a
+            # mid-decode register can reorder/extend the store-wide stack
+            seg[i] = ids.index(row.req.adapter_id)
+        # the tile_t=1 decode view of the packed stack is rebuilt only when
+        # the stack itself changes (pack_batch caches by adapter-id tuple, so
+        # object identity is the change signal; keeping the strong reference
+        # in _dec_src is what makes identity a safe key)
+        if self._dec_src is not packed:
+            self._dec_groups = retile_packed(packed, 1)["groups"]
+            self._dec_src = packed
+        dec = {"base": self.params["base"],
+               "lora": {"groups": self._dec_groups,
+                        "seg": jnp.asarray(seg)}}
+        logits, self._caches = self._decode(
+            dec, jnp.asarray(toks), self._caches,
+            jnp.asarray(pos), jnp.asarray(start))
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        for i in active:
+            row = self._rows[i]
+            row.emitted.append(int(nxt[i]))
+            if self._row_done(row):
+                finished.append(self._retire(i))
+        return finished
+
+    @property
+    def active_rows(self) -> int:
+        return sum(r is not None for r in self._rows)
+
     def run(self, mode: Optional[str] = None) -> List[Request]:
-        """Process all pending requests; returns them with ``output`` set."""
+        """Process all pending requests; returns them with ``output`` set
+        (continuous mode returns completion order, static modes submission
+        order)."""
         mode = mode or self.mode
-        if mode not in ("packed", "materialize"):
+        if mode not in ("continuous", "packed", "materialize"):
             raise ValueError(f"unknown serving mode {mode!r}")  # keep pending
+        mode = self._fallback_mode(mode)
+        done: List[Request] = []
+        if mode == "continuous":
+            while self.pending or self.active_rows:
+                done.extend(self.step())
+            return done
+        if self.active_rows:
+            # a static run must not strand requests mid-decode in the
+            # scheduler's rows: drain them first (without admitting the
+            # pending batch, which belongs to the static run)
+            held, self.pending = self.pending, []
+            while self.active_rows:
+                done.extend(self.step())
+            self.pending = held
         reqs, self.pending = self.pending, []
         if not reqs:
-            return []
+            return done
         if mode == "packed":
-            return self._run_packed(reqs)
-        return self._run_materialize(reqs)
+            return done + self._run_packed(reqs)
+        return done + self._run_materialize(reqs)

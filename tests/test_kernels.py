@@ -93,8 +93,6 @@ def test_lora_apply_full_pipeline(rho, bits_high):
     a = jnp.asarray((np.sqrt(s)[:, None] * v.T).astype(np.float32))
     ql = quantize_lora(b, a, LoRAQuantConfig(rho=rho, bits_high=bits_high,
                                              ste_steps=0))
-    if ql.a_high.bits == 3:
-        pytest.skip("3-bit uses uint32 packing; kernel path covers 1/2/4/8")
     x = _rand((23, n), jnp.float32, seed=9)
     got = lora_apply_quantized(x, ql, interpret=True)
     want = x @ ql.delta_w().T
@@ -167,12 +165,10 @@ def test_fused_lora_apply(bits_high, rho, t):
     want = x @ ql.delta_w().T
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
-    if bits_high != 3:
-        two_pass = lora_apply_quantized(x, ql, interpret=True, fused=False)
-        assert float(jnp.max(jnp.abs(got - two_pass))) <= 1e-3
-    else:                                       # two-pass lacks uint32 packing
-        with pytest.raises(ValueError, match="fused"):
-            lora_apply_quantized(x, ql, interpret=True, fused=False)
+    # the legacy two-pass path now covers every width the fused path does
+    # (group-aware unpack ported, incl. 3-bit uint32) — sweep parity on both
+    two_pass = lora_apply_quantized(x, ql, interpret=True, fused=False)
+    assert float(jnp.max(jnp.abs(got - two_pass))) <= 1e-3
 
 
 def test_fused_binary_low_path_contributes():
@@ -318,6 +314,49 @@ def test_pick_tile_divides():
     for n, g in [(2112, 64), (2368, 64), (6144, 128), (2176, 128)]:
         t = _pick_tile(n, g)
         assert n % t == 0 and t % g == 0 and t <= 2048
+
+
+# --------------------------------------------------------------------------
+# large-M VMEM guard: fused auto-falls back to two-pass instead of blowing
+# the per-step VMEM budget at compile time
+# --------------------------------------------------------------------------
+
+def test_fused_vmem_guard_falls_back_to_two_pass():
+    from repro.kernels.quant_matmul.ops import (
+        FUSED_VMEM_BUDGET,
+        _fused_vmem_estimate,
+        _pick_tile,
+    )
+
+    # synthetic large-M shape: the (tile_t, M) output tile alone is
+    # 128·32768·4 B = 16 MB > FUSED_VMEM_BUDGET
+    m, n, r = 32768, 256, 8
+    ql = _decayed_qlora(m, n, r, rho=1.0, seed=13)
+    tk = _pick_tile(n, ql.a_high.group_size)
+    assert _fused_vmem_estimate(ql, 128, tk) > FUSED_VMEM_BUDGET
+    x = _rand((128, n), jnp.float32, seed=14)
+    reset_launch_counts()
+    got = lora_apply_quantized(x, ql, interpret=True, fused=True)
+    assert "fused_lora" not in LAUNCH_COUNTS          # guard kicked in
+    assert LAUNCH_COUNTS["matmul_rhs"] == 1 and LAUNCH_COUNTS["matmul_out"] == 1
+    want = x @ ql.delta_w().T
+    np.testing.assert_allclose(np.asarray(got[:, :512]),
+                               np.asarray(want[:, :512]),
+                               rtol=1e-4, atol=1e-4)
+    assert got.shape == want.shape
+
+
+def test_fused_vmem_guard_keeps_fused_for_normal_shapes():
+    ql = _decayed_qlora(384, 512, 16, rho=0.8, seed=15)
+    x = _rand((16, 512), jnp.float32, seed=16)
+    reset_launch_counts()
+    lora_apply_quantized(x, ql, interpret=True, fused=True)
+    assert dict(LAUNCH_COUNTS) == {"fused_lora": 1}
+    # an explicit tiny budget forces the degrade on the same small shape
+    reset_launch_counts()
+    lora_apply_quantized(x, ql, interpret=True, fused=True, vmem_budget=1)
+    assert "fused_lora" not in LAUNCH_COUNTS
+    assert LAUNCH_COUNTS["matmul_rhs"] == 2 and LAUNCH_COUNTS["matmul_out"] == 2
 
 
 def test_odd_k_apply_regression():
