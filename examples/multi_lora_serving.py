@@ -67,3 +67,11 @@ if __name__ == "__main__":
     serve_main(["--arch", "llama3.2-3b", "--adapters", "4", "--requests", "8",
                 "--prompt-len", "16", "--max-new", "4",
                 "--mode", "continuous", "--max-rows", "4"])
+    # Bounded-HBM multi-tenancy: 16 registered adapters served through a
+    # 4-slot HBM pool — the other 12 pages live in the host tier and fault
+    # in on demand (prefetched one step ahead; pinned while a row decodes;
+    # LRU-evicted otherwise). Token streams are identical to the run above
+    # the budget; only the [serve] adapter-memory stats line changes.
+    serve_main(["--arch", "llama3.2-3b", "--adapters", "16", "--requests",
+                "32", "--prompt-len", "16", "--max-new", "4",
+                "--mode", "continuous", "--max-rows", "4", "--slots", "4"])

@@ -287,7 +287,7 @@ def sgmv_apply(
         "seg",
     ),
     meta_fields=("bits_hi", "group_ah", "group_bh", "group_al", "group_bl",
-                 "k", "m", "rank", "tile_t", "interpret"),
+                 "k", "m", "rank", "tile_t", "interpret", "fold"),
 )
 @dataclasses.dataclass(frozen=True)
 class PackedLoRABatch:
@@ -297,10 +297,18 @@ class PackedLoRABatch:
     one path (e.g. ``attn/wq``) — never dequantized. Array layout (see
     ``docs/packed_format.md``):
 
-    * before the model's layer scan: ``(L, NA, Rp, ·)`` — the scan slices the
-      leading layer axis like any other stacked param;
+    * before the model's layer scan: ``(L, NA·fold, Rp, ·)`` — the scan
+      slices the leading layer axis like any other stacked param;
     * inside one layer (what :func:`sgmv_apply_packed` consumes):
-      ``(NA, Rp, ·)``.
+      ``(NA·fold, Rp, ·)``.
+
+    ``fold`` is the number of sub-entries each adapter contributes to the
+    stacked axis: 1 for plain ``(L, r, in)`` leaves, ``E`` for leaves with an
+    extra lead dim (MoE per-expert adapters ``(L, E, r, in)``), whose expert
+    axis is folded into the adapter axis so the SGMV kernels stay untouched.
+    The entry for (adapter ``a``, sub-entry ``e``) sits at index
+    ``a * fold + e``; consumers of folded leaves (``models/ffn.py``) build
+    per-row segment ids accordingly.
 
     ``Rp`` is the LoRA rank padded to the fp32 sublane multiple; every
     adapter's high rows occupy ``[0, h)`` and low rows ``[0, r - h)`` of their
@@ -338,6 +346,7 @@ class PackedLoRABatch:
     rank: int
     tile_t: int
     interpret: bool
+    fold: int = 1
 
 
 def _zero_side(rp: int, dim: int, group: int):
@@ -352,11 +361,16 @@ def _zero_side(rp: int, dim: int, group: int):
             jnp.zeros((rp, ng), jnp.int32))
 
 
-def pack_adapter_layers(qls: Sequence[QuantizedLoRA],
-                        interpret: bool = True) -> PackedLoRABatch:
+def pack_adapter_layers(qls: Sequence[QuantizedLoRA], interpret: bool = True,
+                        fold: int = 1) -> PackedLoRABatch:
     """Stack one adapter's per-layer :class:`QuantizedLoRA` list into the
     ``(L, Rp, ·)`` kernel layout (an adapter-axis-free
     :class:`PackedLoRABatch`; :func:`stack_packed_adapters` adds ``NA``).
+
+    ``fold > 1`` handles leaves with an extra lead dim (MoE per-expert
+    adapters): ``qls`` then holds ``L·fold`` entries in row-major
+    ``(layer, sub-entry)`` order and the arrays come out ``(L, fold, Rp, ·)``
+    so the stacking step can merge the sub-entry axis into the adapter axis.
 
     All layers must share shapes and quant config (true by construction for
     one LoRA-linear path of one model). The low side is materialized even for
@@ -364,6 +378,9 @@ def pack_adapter_layers(qls: Sequence[QuantizedLoRA],
     """
     if not qls:
         raise ValueError("cannot pack an empty layer list")
+    if fold < 1 or len(qls) % fold:
+        raise ValueError(f"entry count {len(qls)} must be a multiple of "
+                         f"fold {fold}")
     q0 = qls[0]
     r = q0.rank
     rp = -(-r // SUBLANE) * SUBLANE
@@ -388,8 +405,13 @@ def pack_adapter_layers(qls: Sequence[QuantizedLoRA],
         else:
             sides["al"].append(_zero_side(rp, k, group))
             sides["bl"].append(_zero_side(rp, m, group))
-    stacked = {name: [jnp.stack([layer[i] for layer in layers])
-                      for i in range(3)]
+    def _stack(layers, i):
+        arr = jnp.stack([layer[i] for layer in layers])
+        if fold > 1:                     # (L·fold, Rp, ·) → (L, fold, Rp, ·)
+            arr = arr.reshape((arr.shape[0] // fold, fold) + arr.shape[1:])
+        return arr
+
+    stacked = {name: [_stack(layers, i) for i in range(3)]
                for name, layers in sides.items()}
     return PackedLoRABatch(
         *stacked["ah"], *stacked["bh"], *stacked["al"], *stacked["bl"],
@@ -397,7 +419,7 @@ def pack_adapter_layers(qls: Sequence[QuantizedLoRA],
         bits_hi=bits,
         group_ah=q0.a_high.group_size, group_bh=q0.b_high.group_size,
         group_al=group_al, group_bl=group_bl,
-        k=k, m=m, rank=r, tile_t=1, interpret=interpret,
+        k=k, m=m, rank=r, tile_t=1, interpret=interpret, fold=fold,
     )
 
 
@@ -409,19 +431,27 @@ _PACKED_ARRAY_FIELDS = (
 
 def stack_packed_adapters(entries: Sequence[PackedLoRABatch],
                           tile_t: int = 8) -> PackedLoRABatch:
-    """Stack per-adapter packed entries (each ``(L, Rp, ·)``) along a new
-    adapter axis → ``(L, NA, Rp, ·)``, the form the model's layer scan
+    """Stack per-adapter packed entries (each ``(L, Rp, ·)``, or
+    ``(L, fold, Rp, ·)`` for extra-lead-dim leaves) along a new adapter
+    axis → ``(L, NA·fold, Rp, ·)``, the form the model's layer scan
     slices. Adapters must share shapes and quant config (one
     :class:`~repro.serving.engine.AdapterStore` guarantees this)."""
     e0 = entries[0]
     for e in entries[1:]:
-        if (e.bits_hi, e.k, e.m, e.rank, e.group_ah, e.group_bh) != (
-                e0.bits_hi, e0.k, e0.m, e0.rank, e0.group_ah, e0.group_bh):
+        if (e.bits_hi, e.k, e.m, e.rank, e.group_ah, e.group_bh, e.fold) != (
+                e0.bits_hi, e0.k, e0.m, e0.rank, e0.group_ah, e0.group_bh,
+                e0.fold):
             raise ValueError(
                 "heterogeneous batches require adapters with one shape and "
                 "quant config; re-register through a single AdapterStore")
-    arrays = {f: jnp.stack([getattr(e, f) for e in entries], axis=1)
-              for f in _PACKED_ARRAY_FIELDS}
+
+    def _stack(f):
+        arr = jnp.stack([getattr(e, f) for e in entries], axis=1)
+        if e0.fold > 1:            # (L, NA, fold, Rp, ·) → (L, NA·fold, Rp, ·)
+            arr = arr.reshape(arr.shape[:1] + (-1,) + arr.shape[3:])
+        return arr
+
+    arrays = {f: _stack(f) for f in _PACKED_ARRAY_FIELDS}
     return dataclasses.replace(e0, **arrays, tile_t=tile_t)
 
 

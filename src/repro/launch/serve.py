@@ -70,6 +70,16 @@ def main(argv=None):
                         "dequantized fp trees")
     p.add_argument("--max-rows", type=int, default=8,
                    help="decode batch rows owned by the continuous scheduler")
+    p.add_argument("--slots", type=int, default=None,
+                   help="HBM slot-pool size of the paged adapter memory "
+                        "(continuous mode): at most this many adapters' "
+                        "packed pages are device-resident; the rest page in "
+                        "from the host tier on demand. Default: unbounded "
+                        "(pool grows to every registered adapter)")
+    p.add_argument("--hbm-budget", type=float, default=None, metavar="MB",
+                   help="alternative to --slots: packed-adapter HBM budget "
+                        "in MB; the slot count is derived as "
+                        "budget // page_bytes (--slots wins if both given)")
     p.add_argument("--no-quant", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -83,21 +93,25 @@ def main(argv=None):
     qcfg = parse_variant(args.variant)
     if args.no_quant:
         qcfg = dataclasses.replace(qcfg, bits_high=16)
-    store = AdapterStore(qcfg)
+    budget = (int(args.hbm_budget * 1e6)
+              if args.hbm_budget is not None else None)
+    store = AdapterStore(qcfg, hbm_budget_bytes=budget)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     print(f"[serve] registering {args.adapters} adapters "
           f"(LoRAQuant {qcfg.bits_high}@{qcfg.rho:g})...")
     t0 = time.perf_counter()
+    uploads = {}
     for i in range(args.adapters):
         rng, k = jax.random.split(rng)
-        lora = random_trained_lora(params["lora"], k)
-        store.register(f"user_{i}", lora)
+        uploads[f"user_{i}"] = random_trained_lora(params["lora"], k)
+    store.register_many(uploads)         # one bucketed dispatch per leaf shape
     print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
           f"store stats: {store.stats()}")
 
     engine = MultiLoRAEngine(model, params, store, cache_capacity=128,
-                             mode=args.mode, max_rows=args.max_rows)
+                             mode=args.mode, max_rows=args.max_rows,
+                             hbm_slots=args.slots)
     drng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -113,6 +127,15 @@ def main(argv=None):
     print(f"[serve] mode={args.mode}: {len(done)} requests, {total_tokens} "
           f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s); "
           f"fp-resident LoRA bytes: {store.fp_resident_bytes()}")
+    mem = engine.memory_stats()
+    if mem:
+        print(f"[serve] adapter memory: {mem['slots']} slots "
+              f"({mem['hbm_slot_mb']:.3f} MB HBM) over "
+              f"{store.stats()['adapters']:.0f} adapters "
+              f"({mem['host_tier_mb']:.3f} MB host tier); "
+              f"hit rate {mem['hit_rate']:.2f}, "
+              f"swap-ins {mem['swap_ins']:.0f}, "
+              f"evictions {mem['evictions']:.0f}")
     print(f"[serve] sample output (req 0): {done[0].output.tolist()}")
     return done
 

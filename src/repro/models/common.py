@@ -166,7 +166,12 @@ def linear(
     * ``repro.core.QuantizedLoRA`` — one adapter for the whole batch;
     * ``repro.kernels.PackedLoRABatch`` — a stack of adapters with per-token
       segment ids (heterogeneous multi-adapter serving), dispatched to the
-      fused SGMV kernel."""
+      fused SGMV kernel. The seg ids index whatever adapter axis the stack
+      carries: store-wide adapter order for the static packed mode, HBM
+      **slot** ids under the paged memory tier (``docs/adapter_memory.md``);
+      leaves with a folded extra lead dim (MoE experts, ``fold > 1``) are
+      consumed by the MoE dispatch in ``models/ffn.py`` instead, which
+      builds folded ``(adapter, expert)`` seg ids per dispatch-buffer row."""
     y = x @ base["w"]
     if lora is None:
         return y

@@ -197,14 +197,37 @@ def moe_ffn(
     return y.reshape(b, t, d), aux
 
 
-def _expert_ffw(ex, lex, name, inp, scaling):
-    """Batched expert matmul (E, C, ·) with optional per-expert LoRA."""
+def _expert_ffw(ex, lex, name, inp, scaling, buf_seg=None):
+    """Batched expert matmul (E, C, ·) with optional per-expert LoRA.
+
+    The LoRA leaf is either a plain fp ``{"a", "b"}`` per-expert stack
+    (einsum path) or a packed multi-adapter
+    :class:`~repro.kernels.PackedLoRABatch` whose expert axis is folded
+    into the adapter axis (``fold == E``); the packed path needs
+    ``buf_seg`` — the per-dispatch-buffer-row *adapter* segment id — and
+    folds it with the row's expert index to gather (adapter, expert) codes
+    straight through the SGMV kernel (``tile_t = 1``: dispatch buffers mix
+    adapters arbitrarily within one expert's capacity slots).
+    """
     w = ex[name]["w"]
     if w.dtype == jnp.int8:
         w = w.astype(inp.dtype) * ex[name]["scale"].astype(inp.dtype)
     y = jnp.einsum("ecd,edf->ecf", inp, w)
     if lex is not None:
-        la, lb = lex[name]["a"], lex[name]["b"]           # (E, r, in), (E, out, r)
+        leaf = lex[name]
+        from repro.kernels import PackedLoRABatch, sgmv_apply_packed
+
+        if isinstance(leaf, PackedLoRABatch):
+            import dataclasses as _dc
+
+            e, c, _ = inp.shape
+            expert_of_row = jnp.repeat(jnp.arange(e, dtype=jnp.int32), c)
+            folded = buf_seg.astype(jnp.int32) * leaf.fold + expert_of_row
+            pb = _dc.replace(leaf, seg=folded, tile_t=1)
+            upd = sgmv_apply_packed(inp.reshape(e * c, -1), pb,
+                                    scaling=scaling)
+            return y + upd.reshape(y.shape).astype(y.dtype)
+        la, lb = leaf["a"], leaf["b"]                     # (E, r, in), (E, out, r)
         upd = jnp.einsum("ecr,eor->eco", jnp.einsum(
             "ecd,erd->ecr", inp.astype(la.dtype), la), lb)
         y = y + (scaling * upd).astype(y.dtype)
@@ -213,6 +236,8 @@ def _expert_ffw(ex, lex, name, inp, scaling):
 
 def _moe_dense_dispatch(x_loc, gate_loc, idx_loc, ex, lex, e, k, cap, scaling):
     """Sort-gather-scatter token-choice dispatch on one device's tokens."""
+    from repro.kernels import PackedLoRABatch
+
     tok = x_loc.shape[0]
     d = x_loc.shape[1]
     flat_e = idx_loc.reshape(-1)                          # (tok·k,)
@@ -223,10 +248,24 @@ def _moe_dense_dispatch(x_loc, gate_loc, idx_loc, ex, lex, e, k, cap, scaling):
     buf = jnp.zeros((e * cap + 1, d), x_loc.dtype).at[dest].set(gathered)
     buf = buf[:-1].reshape(e, cap, d)
 
-    g = _expert_ffw(ex, lex, "wg", buf, scaling)
-    u = _expert_ffw(ex, lex, "wu", buf, scaling)
+    buf_seg = None
+    if lex is not None and any(isinstance(l, PackedLoRABatch)
+                               for l in lex.values()):
+        # per-token adapter segment ids ride the packed leaves (attached by
+        # Model._backbone); permute them through the same gather/scatter so
+        # every dispatch-buffer row knows its adapter. Dropped assignments
+        # land on the sentinel row (sliced off); empty capacity slots keep
+        # seg 0, harmless since LoRA is linear and their x rows are zero.
+        seg_tok = next(l.seg for l in lex.values()
+                       if isinstance(l, PackedLoRABatch))
+        gathered_seg = seg_tok[src_tok[order]].astype(jnp.int32)
+        buf_seg = (jnp.zeros((e * cap + 1,), jnp.int32)
+                   .at[dest].set(gathered_seg))[:-1]
+
+    g = _expert_ffw(ex, lex, "wg", buf, scaling, buf_seg)
+    u = _expert_ffw(ex, lex, "wu", buf, scaling, buf_seg)
     h = jax.nn.silu(g) * u
-    out = _expert_ffw(ex, lex, "wd", h, scaling)          # (E, cap, d)
+    out = _expert_ffw(ex, lex, "wd", h, scaling, buf_seg)  # (E, cap, d)
 
     out_flat = out.reshape(e * cap, d)
     slot = jnp.where(
@@ -275,6 +314,13 @@ def _moe_shard_map(xf, gate, top_idx, base, lora, cfg, mesh, fsdp_axes,
     tok_loc = n_tok // s_count
     cap_loc = max(int(np.ceil(tok_loc * k / e * mc.capacity_factor)), 8)
     lex = lora.get("experts") if (lora and mc.lora_on_experts) else None
+    if lex is not None:
+        from repro.kernels import PackedLoRABatch
+
+        if any(isinstance(l, PackedLoRABatch) for l in lex.values()):
+            raise NotImplementedError(
+                "packed multi-adapter expert LoRA is a serving-path feature "
+                "(no mesh); under shard_map serve with mode='materialize'")
     ep = e % s_count == 0
     fa = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
 

@@ -6,8 +6,10 @@ from .engine import (
     dequantize_adapter,
     quantize_adapter_tree,
 )
+from .memory import AdapterMemoryManager
 
 __all__ = [
-    "AdapterStore", "MultiLoRAEngine", "QuantizedAdapter", "Request",
-    "dequantize_adapter", "quantize_adapter_tree",
+    "AdapterMemoryManager", "AdapterStore", "MultiLoRAEngine",
+    "QuantizedAdapter", "Request", "dequantize_adapter",
+    "quantize_adapter_tree",
 ]

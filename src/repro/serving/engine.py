@@ -18,6 +18,12 @@ Components (full walkthrough in ``docs/serving.md``):
   rows *mid-decode*, finished rows retire immediately, and per-row adapter
   segment ids are rebuilt every step so one fixed-shape decode program
   serves an arbitrarily churning mix of users straight from packed codes.
+  Continuous mode reads those codes through the **paged adapter memory**
+  (:class:`repro.serving.memory.AdapterMemoryManager`): a bounded pool of
+  HBM slots (seg ids are slot ids) over a host-RAM tier holding every
+  registered adapter, with admission-time page faults, one-step-ahead
+  prefetch, pinning for live rows, and LRU eviction — HBM scales with the
+  hot set, not the registry (see ``docs/adapter_memory.md``).
   ``mode="packed"`` keeps the static one-shot heterogeneous batch and
   ``mode="materialize"`` the S-LoRA-style per-adapter segment loop (fp tree
   swapped into the params per segment) as parity references.
@@ -38,7 +44,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -176,6 +181,18 @@ def dequantize_adapter(qa: QuantizedAdapter, like_tree) -> Any:
     return rebuild(like_tree, "")
 
 
+def _leaf_folds(template) -> Dict[str, int]:
+    """Per-path fold factor: extra lead dims beyond the layer axis (MoE
+    per-expert adapters ``(L, E, r, in)`` → E) that packing folds into the
+    adapter axis of the SGMV stack. Plain ``(L, r, in)`` leaves fold 1."""
+    folds: Dict[str, int] = {}
+    for path, leaf in iter_lora_linears(template):
+        shape = tuple(leaf["a"].shape)
+        folds[path] = (int(np.prod(shape[1:-2], dtype=np.int64))
+                       if len(shape) > 3 else 1)
+    return folds
+
+
 class AdapterStore:
     """Quantized-at-rest adapter registry.
 
@@ -189,18 +206,32 @@ class AdapterStore:
       path pay fp16-equivalent residency.
 
     Re-registering an ``adapter_id`` invalidates both caches — a stale fp
-    tree in the LRU would otherwise keep serving the pre-update adapter.
+    tree in the LRU would otherwise keep serving the pre-update adapter —
+    and :meth:`unregister` removes an adapter outright (long-lived servers
+    must be able to drop churned users instead of leaking them forever).
+    Every mutation bumps a per-id version and a store-wide mutation counter;
+    the paged memory tier (:class:`repro.serving.memory.AdapterMemoryManager`)
+    reconciles against both instead of holding references into the store.
+
+    ``hbm_budget_bytes`` caps the device-resident packed footprint of the
+    *continuous* serving path: the memory manager derives its HBM slot count
+    as ``hbm_budget_bytes // page_bytes`` (a page = one adapter's packed
+    codes across all layers/paths). ``None`` means unbounded (all-resident).
     """
 
     def __init__(self, config: LoRAQuantConfig, fp_cache_bytes: int = 1 << 30,
-                 batched_quantize: bool = True):
+                 batched_quantize: bool = True,
+                 hbm_budget_bytes: Optional[int] = None):
         self.config = config
         self.quantized: Dict[str, QuantizedAdapter] = {}
         self.fp_cache_bytes = fp_cache_bytes
         self.batched_quantize = batched_quantize
+        self.hbm_budget_bytes = hbm_budget_bytes
         self._lru: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
         self._packed: Dict[Tuple[str, bool], Dict[str, PackedLoRABatch]] = {}
         self._batch_cache: Dict[tuple, Any] = {}
+        self._versions: Dict[str, int] = {}
+        self._mutations: int = 0
 
     def _invalidate(self, adapter_id: str):
         self._lru.pop(adapter_id, None)
@@ -208,16 +239,43 @@ class AdapterStore:
             self._packed.pop((adapter_id, flag), None)
         self._batch_cache.clear()
 
+    def _bump(self, adapter_id: str):
+        self._mutations += 1
+        self._versions[adapter_id] = self._mutations
+
+    def version(self, adapter_id: str) -> Optional[int]:
+        """Monotonic per-id registration epoch; ``None`` if unregistered."""
+        return self._versions.get(adapter_id)
+
+    def mutation_count(self) -> int:
+        """Store-wide mutation counter (register / re-register / unregister
+        all bump it) — a cheap change signal for external caches."""
+        return self._mutations
+
     def register(self, adapter_id: str, lora_tree) -> QuantizedAdapter:
         qa = quantize_adapter_tree(lora_tree, self.config,
                                    batched=self.batched_quantize)
         self._invalidate(adapter_id)
         self.quantized[adapter_id] = qa
+        self._bump(adapter_id)
         return qa
 
     def register_quantized(self, adapter_id: str, qa: QuantizedAdapter):
         self._invalidate(adapter_id)
         self.quantized[adapter_id] = qa
+        self._bump(adapter_id)
+
+    def unregister(self, adapter_id: str):
+        """Drop an adapter: quantized entries, fp LRU entry, packed-layout
+        and batch caches all go. Requests already decoding keep their codes
+        (the paged tier pins live pages); new requests for the id fail
+        admission with ``KeyError``."""
+        if adapter_id not in self.quantized:
+            raise KeyError(f"adapter {adapter_id!r} is not registered")
+        del self.quantized[adapter_id]
+        self._invalidate(adapter_id)
+        self._versions.pop(adapter_id, None)
+        self._mutations += 1
 
     def register_many(self, trees: Dict[str, Any]) -> Dict[str, QuantizedAdapter]:
         """Onboard many uploaded adapters in one bucketed dispatch.
@@ -275,8 +333,10 @@ class AdapterStore:
         key = (adapter_id, interpret)
         if key not in self._packed:
             qa = self.quantized[adapter_id]
+            folds = _leaf_folds(qa.template)
             self._packed[key] = {
-                path: pack_adapter_layers(qs, interpret=interpret)
+                path: pack_adapter_layers(qs, interpret=interpret,
+                                          fold=folds.get(path, 1))
                 for path, qs in qa.entries.items()
             }
         return self._packed[key]
@@ -305,12 +365,13 @@ class AdapterStore:
             if isinstance(node, dict):
                 if set(node.keys()) == {"a", "b"}:
                     shape = tuple(node["a"].shape)
-                    if len(shape) != 3:
+                    if len(shape) < 3:
                         raise NotImplementedError(
-                            f"packed serving needs plain (L, r, in) layer "
-                            f"stacks; leaf {path} has shape {shape} (extra "
-                            f"lead dims, e.g. MoE experts) — serve it with "
-                            f"mode='materialize'")
+                            f"packed serving needs stacked (L, ..., r, in) "
+                            f"layer leaves; {path} has unscanned 2-D shape "
+                            f"{shape} — serve it with mode='materialize'")
+                    # extra lead dims (MoE experts) are folded into the
+                    # adapter axis by the packed entries' ``fold`` meta
                     return stack_packed_adapters([p[path] for p in per],
                                                  tile_t=tile_t)
                 return {k: rebuild(v, f"{path}/{k}") for k, v in node.items()}
@@ -334,6 +395,14 @@ class AdapterStore:
         0 whenever serving runs purely from packed codes."""
         return sum(self._tree_bytes(t) for t in self._lru.values())
 
+    def packed_cache_bytes(self) -> int:
+        """Bytes of device-resident packed layouts held by the *static*
+        serving paths (per-adapter entries + stacked batch trees). The paged
+        continuous path holds its pages in the memory manager instead and
+        keeps these caches empty."""
+        return (sum(self._tree_bytes(v) for v in self._packed.values())
+                + sum(self._tree_bytes(v) for v in self._batch_cache.values()))
+
     def stats(self) -> Dict[str, float]:
         n = len(self.quantized)
         bits = self.resident_bits()
@@ -344,6 +413,10 @@ class AdapterStore:
             "quantized_mb": bits / 8 / 1e6,
             "fp16_equiv_mb": params * 2 / 1e6,
             "fp_lru_mb": self.fp_resident_bytes() / 1e6,
+            "packed_cache_mb": self.packed_cache_bytes() / 1e6,
+            "hbm_budget_mb": (self.hbm_budget_bytes / 1e6
+                              if self.hbm_budget_bytes is not None
+                              else float("inf")),
         }
 
 
@@ -366,6 +439,9 @@ class _Row:
     start: int                  # left-pad count (first real cache index)
     prompt_len: int
     emitted: List[int]          # generated tokens so far (≥ 1 after prefill)
+    slot: int                   # HBM slot holding this row's adapter page
+                                # (pinned until retirement; doubles as the
+                                # row's SGMV segment id)
 
 
 class MultiLoRAEngine:
@@ -389,20 +465,28 @@ class MultiLoRAEngine:
     heterogeneous left-padded batch, decoded to the longest request.
 
     ``mode="materialize"``: the S-LoRA-style per-adapter segment loop over
-    dequantized fp trees (the portable reference; also the automatic
-    fallback when the lora tree has leaves packed serving cannot stack,
-    e.g. MoE per-expert adapters).
+    dequantized fp trees (the portable reference).
 
     All three modes mask pad slots out of attention and use real (unpadded)
     rotary positions, so their outputs agree token-for-token with each
     other and with unpadded solo serving (attention architectures; see
     docs/serving.md for the recurrent-state caveat).
+
+    **Adapter memory.** Continuous mode reads packed codes through a paged
+    two-tier memory (:class:`repro.serving.memory.AdapterMemoryManager`):
+    a fixed pool of HBM slots holds the hot adapters (row seg ids *are*
+    slot ids), the full registry stays in host RAM as numpy, and admission
+    faults pages in — with next-wave prefetch issued one step ahead so the
+    transfer overlaps decode — while LRU eviction reclaims unpinned slots.
+    ``hbm_slots`` (or ``store.hbm_budget_bytes``) bounds the pool;
+    ``None`` keeps every registered adapter resident (the pool grows),
+    which is the classic packed behavior. See ``docs/adapter_memory.md``.
     """
 
     def __init__(self, model, base_params, store: AdapterStore,
                  cache_capacity: int = 512, mode: str = "continuous",
                  seg_tile: int = 8, interpret: bool = True,
-                 max_rows: int = 8):
+                 max_rows: int = 8, hbm_slots: Optional[int] = None):
         self.model = model
         self.params = base_params         # {"base", "lora"(template)}
         self.store = store
@@ -411,12 +495,12 @@ class MultiLoRAEngine:
         self.seg_tile = seg_tile
         self.interpret = interpret
         self.max_rows = max_rows
+        self.hbm_slots = hbm_slots
         self.pending: List[Request] = []
         self._rows: List[Optional[_Row]] = [None] * max_rows
         self._caches = None               # persistent (max_rows)-row caches
-        self._packable: Optional[bool] = None
-        self._warned_fallback = False
-        self._dec_groups = None           # decode-retiled view of _packed_all
+        self._memory = None               # paged adapter memory (lazy)
+        self._dec_groups = None           # decode-retiled view of the pool
         self._dec_src = None              # the packed tree it was built from
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cache_capacity))
@@ -510,63 +594,50 @@ class MultiLoRAEngine:
 
     # ----- continuous scheduler -----
 
-    def _tree_packable(self) -> bool:
-        """Packed serving needs plain ``(L, r, in)`` layer stacks; leaves
-        with extra lead dims (MoE per-expert adapters) cannot be stacked
-        into a :class:`PackedLoRABatch`."""
-        if self._packable is None:
-            self._packable = all(
-                np.ndim(leaf["a"]) == 3
-                for _, leaf in iter_lora_linears(self.params["lora"]))
-        return self._packable
+    @property
+    def memory(self):
+        """The paged adapter memory backing continuous mode (lazy: built on
+        first use so static-mode engines never allocate a pool)."""
+        if self._memory is None:
+            from repro.serving.memory import AdapterMemoryManager
 
-    def _fallback_mode(self, mode: str) -> str:
-        """Resolve packed-family modes to ``materialize`` (with a one-time
-        warning) when the lora tree cannot be packed."""
-        if mode in ("packed", "continuous") and not self._tree_packable():
-            if not self._warned_fallback:
-                warnings.warn(
-                    "lora tree has {'a','b'} leaves with extra lead dims "
-                    "(e.g. MoE per-expert adapters) that packed serving "
-                    "cannot stack; falling back to mode='materialize'",
-                    stacklevel=3)
-                self._warned_fallback = True
-            return "materialize"
-        return mode
+            self._memory = AdapterMemoryManager(
+                self.store, self.params["lora"], num_slots=self.hbm_slots,
+                tile_t=self.seg_tile, interpret=self.interpret)
+        return self._memory
 
-    def _packed_all(self):
-        """Store-wide packed stack + canonical id order (continuous mode
-        packs every registered adapter so the decode program's shapes stay
-        fixed while rows/adapters come and go; codes are quantized, so the
-        whole store is cheap to keep device-resident)."""
-        ids = sorted(self.store.quantized)
-        packed = self.store.pack_batch(ids, self.params["lora"],
-                                       tile_t=self.seg_tile,
-                                       interpret=self.interpret)
-        return ids, packed
+    def memory_stats(self) -> Dict[str, float]:
+        """Hit/miss/swap/eviction counters and per-tier bytes of the paged
+        adapter memory (empty dict before the first continuous step)."""
+        return self._memory.stats() if self._memory is not None else {}
 
     def _tpad(self, req: Request) -> int:
         return max(self.seg_tile,
                    -(-len(req.prompt) // self.seg_tile) * self.seg_tile)
 
     def _admit_group(self, reqs: List[Request], rows: List[int],
-                     ids, packed) -> List[_Row]:
+                     slots: List[int]) -> List[_Row]:
         """Prefill a group of same-padded-length requests as ONE batch
         (left-padded to a shared ``seg_tile`` multiple — the group's rows
         stay independent under the pad-mask contract) and scatter their
         cache rows into the persistent batch in one call. Batching the
         admissions amortizes per-dispatch overhead when requests arrive in
-        bursts; a lone arrival is simply a group of one."""
+        bursts; a lone arrival is simply a group of one. ``slots`` maps each
+        request to its adapter's (already pinned) HBM slot — the SGMV
+        segment id; a request whose page was faulted in this step is simply
+        queued behind the swap-in by dispatch order."""
         tpad = self._tpad(reqs[0])
-        aidx = np.asarray([ids.index(r.adapter_id) for r in reqs], np.int32)
+        sidx = np.asarray(slots, np.int32)
         starts = np.asarray([tpad - len(r.prompt) for r in reqs], np.int32)
         toks = np.stack([
             np.pad(np.asarray(r.prompt), (tpad - len(r.prompt), 0))
             for r in reqs
         ]).astype(np.int32)
+        # fetch the tree AFTER acquire()s: this step's swap-ins are in it
+        packed = self.memory.serving_tree()
         pre = {"base": self.params["base"],
                "lora": {"groups": packed["groups"],
-                        "seg": jnp.asarray(np.repeat(aidx, tpad))}}
+                        "seg": jnp.asarray(np.repeat(sidx, tpad))}}
         logits, grp_caches = self._prefill(
             pre, {"tokens": jnp.asarray(toks), "start": jnp.asarray(starts)})
         firsts = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
@@ -577,7 +648,8 @@ class MultiLoRAEngine:
         for b, (req, row_idx) in enumerate(zip(reqs, rows)):
             req.t_first = now
             row = _Row(req=req, start=int(starts[b]),
-                       prompt_len=len(req.prompt), emitted=[int(firsts[b])])
+                       prompt_len=len(req.prompt), emitted=[int(firsts[b])],
+                       slot=int(slots[b]))
             self._rows[row_idx] = row
             out.append(row)
         return out
@@ -591,11 +663,25 @@ class MultiLoRAEngine:
     def _retire(self, row_idx: int) -> Request:
         row = self._rows[row_idx]
         self._rows[row_idx] = None
+        self.memory.unpin(row.req.adapter_id)   # slot becomes evictable
         # prefill always seeds one token; cap at the budget so degenerate
         # max_new_tokens <= 0 requests match the static modes' empty output
         row.req.output = np.asarray(
             row.emitted[: max(row.req.max_new_tokens, 0)], np.int32)
         return row.req
+
+    def _prefetch_upcoming(self):
+        """Stage the next admission wave's adapter pages one step ahead.
+        Called after this step's decode view is built and before the decode
+        dispatch, so the host→HBM copies overlap the decode compute."""
+        upcoming: List[str] = []
+        seen = set()
+        for r in self.pending[: self.max_rows]:
+            if r.adapter_id not in seen:
+                seen.add(r.adapter_id)
+                upcoming.append(r.adapter_id)
+        if upcoming:
+            self.memory.prefetch(upcoming)
 
     def step(self) -> List[Request]:
         """Advance the continuous scheduler by one decode step.
@@ -603,22 +689,27 @@ class MultiLoRAEngine:
         1. **Admit**: move pending requests into free rows (FIFO; bursts of
            equal padded length prefill as one batch → cache-row scatter; a
            request that finishes at admission frees its row for the next
-           pending one immediately).
+           pending one immediately). Each admitted request's adapter is
+           mapped to a pinned HBM slot (``memory.acquire``): residency is a
+           hit, a miss faults the page in from the host tier (usually
+           already staged by last step's prefetch), and when every slot is
+           pinned by live rows the request simply stays pending.
         2. **Decode**: one step for the whole fixed-shape batch — per-row
-           cache positions/validity and per-row adapter seg ids; inactive
-           rows run fully masked and are ignored.
+           cache positions/validity and per-row adapter **slot** ids as SGMV
+           seg ids; inactive rows run fully masked and are ignored. Before
+           the dispatch, next wave's pages are prefetched (swap-ins write
+           fresh buffers, so the copies overlap the in-flight decode).
         3. **Retire**: rows hitting ``max_new_tokens``/``eos_id`` free their
-           slot and their request (with ``output`` set) is returned.
+           batch row, unpin their adapter slot, and their request (with
+           ``output`` set) is returned.
 
         Returns the requests finished during this step, completion-ordered.
         """
-        if self._fallback_mode("continuous") != "continuous":
-            reqs, self.pending = self.pending, []
-            return self._run_materialize(reqs) if reqs else []
         finished: List[Request] = []
         if not self.pending and all(r is None for r in self._rows):
             return finished
-        ids, packed = self._packed_all()
+        mgr = self.memory
+        mgr.refresh()                      # reconcile store mutations
         if self._caches is None:
             self._caches = self.model.init_cache(self.max_rows, self.capacity)
         # admit FIFO, batching the leading run of equal padded lengths into
@@ -637,14 +728,27 @@ class MultiLoRAEngine:
                     raise KeyError(
                         f"request {r.request_id}: adapter {r.adapter_id!r} "
                         f"is not registered in the AdapterStore")
+            # adapter → pinned slot, one pin per row; shrink the group at
+            # the first request whose page cannot get a slot (every slot
+            # pinned by live rows) — it waits for a retirement
+            slots: List[int] = []
+            for r in group:
+                s = mgr.acquire(r.adapter_id)
+                if s is None:
+                    break
+                slots.append(s)
+            group = group[: len(slots)]
+            if not group:
+                break
             del self.pending[:len(group)]
             rows = free[:len(group)]
             for row_idx, row in zip(rows,
-                                    self._admit_group(group, rows, ids, packed)):
+                                    self._admit_group(group, rows, slots)):
                 if self._row_done(row):
                     finished.append(self._retire(row_idx))
         active = [i for i in range(self.max_rows) if self._rows[i] is not None]
         if not active:
+            self._prefetch_upcoming()
             return finished
         toks = np.zeros((self.max_rows, 1), np.int32)
         pos = np.zeros((self.max_rows,), np.int32)
@@ -657,19 +761,23 @@ class MultiLoRAEngine:
             toks[i, 0] = row.emitted[-1]
             pos[i] = row.start + row.prompt_len + len(row.emitted) - 1
             start[i] = row.start
-            # resolve the adapter index against the CURRENT id order — a
-            # mid-decode register can reorder/extend the store-wide stack
-            seg[i] = ids.index(row.req.adapter_id)
-        # the tile_t=1 decode view of the packed stack is rebuilt only when
-        # the stack itself changes (pack_batch caches by adapter-id tuple, so
-        # object identity is the change signal; keeping the strong reference
-        # in _dec_src is what makes identity a safe key)
+            # seg ids ARE slot ids: pinned at admission, so stable across
+            # store mutations and other adapters' evictions/swap-ins
+            seg[i] = row.slot
+        packed = mgr.serving_tree()
+        # the tile_t=1 decode view of the slot pool is rebuilt only when the
+        # pool changed (serving_tree caches until a swap-in/growth dirties
+        # it, so object identity is the change signal; keeping the strong
+        # reference in _dec_src is what makes identity a safe key)
         if self._dec_src is not packed:
             self._dec_groups = retile_packed(packed, 1)["groups"]
             self._dec_src = packed
         dec = {"base": self.params["base"],
                "lora": {"groups": self._dec_groups,
                         "seg": jnp.asarray(seg)}}
+        # stage next wave AFTER building this step's view, BEFORE dispatch:
+        # the swap-in copies and the decode below have no data dependency
+        self._prefetch_upcoming()
         logits, self._caches = self._decode(
             dec, jnp.asarray(toks), self._caches,
             jnp.asarray(pos), jnp.asarray(start))
@@ -692,7 +800,6 @@ class MultiLoRAEngine:
         mode = mode or self.mode
         if mode not in ("continuous", "packed", "materialize"):
             raise ValueError(f"unknown serving mode {mode!r}")  # keep pending
-        mode = self._fallback_mode(mode)
         done: List[Request] = []
         if mode == "continuous":
             while self.pending or self.active_rows:

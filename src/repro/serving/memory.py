@@ -1,0 +1,456 @@
+"""Paged adapter memory: HBM slot pool + host tier + prefetch/eviction.
+
+Packed serving (``docs/packed_format.md``) made every registered adapter's
+codes device-resident in one ever-growing ``(L, NA, Rp, ·)`` stack. That is
+the right call while the store fits in HBM, but at the "millions of users"
+tier the adapter stack — not the base model — becomes the HBM bottleneck.
+This module bounds it: a fixed number of HBM **slots** hold the *hot set*
+of adapters, every registered adapter's packed codes live in a host-RAM
+tier as numpy, and the continuous scheduler faults the long tail in on
+demand (see ``docs/adapter_memory.md``).
+
+Key facts that make paging cheap:
+
+* **Uniform pages.** Zero-scale rank padding already gives every adapter of
+  one store identical per-path leaf shapes ``(L, [fold,] Rp, ·)``, so a
+  "page" is a fixed-size slice of the persistent slot stack and a swap-in
+  is one ``dynamic_update_slice`` per leaf array — no reallocation, no
+  recompilation (the decode program's shapes are a function of the slot
+  count, not of how many adapters exist).
+* **Slot ids are segment ids.** The SGMV kernels index an arbitrary adapter
+  axis via per-row segment ids; pointing a row's seg id at a *slot* instead
+  of a store-wide index leaves the kernels untouched.
+* **Pinning.** A slot referenced by a live batch row is pinned (refcounted)
+  and never evicted, so mid-decode rows keep reading stable codes while the
+  unpinned remainder of the pool churns LRU.
+* **Prefetch.** The engine issues swap-ins for the next admission wave
+  *before* dispatching the current decode step; the copies have no data
+  dependency on the in-flight step (functional update → fresh buffers), so
+  host→HBM transfer overlaps decode compute.
+
+The manager is policy + bookkeeping; it owns no kernel code.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import PackedLoRABatch, pack_adapter_layers
+from repro.kernels.quant_matmul.ops import (
+    _PACKED_ARRAY_FIELDS as _ARRAY_FIELDS,
+)
+
+# page meta = everything that isn't a packed array, the late-attached seg,
+# or a per-view knob — derived from the dataclass so a new field added to
+# PackedLoRABatch cannot silently go un-copied
+_META_FIELDS = tuple(
+    f.name for f in dataclasses.fields(PackedLoRABatch)
+    if f.name not in _ARRAY_FIELDS + ("seg", "tile_t", "interpret"))
+
+
+@jax.jit
+def _page_write(pool, page, starts):
+    """Write one adapter's whole page into the persistent slot stacks at
+    the (per-path, fold-scaled) columns in ``starts`` — the
+    ``pool.at[slot].set`` of the design, batched over every leaf array so a
+    swap-in is ONE dispatch, not #paths·#fields dispatches. The slot column
+    is a traced operand: faulting into slot 0 and slot 7 share the
+    executable, and the pool shapes never change, so there is exactly one
+    compile per pool geometry. The update is functional (old buffers stay
+    valid for any already-dispatched decode step, which is what lets
+    prefetch overlap compute); on a real TPU deployment add
+    ``donate_argnums=(0,)`` + drop the cached tree to alias in place —
+    donation is a no-op warning on the CPU backend this container uses."""
+    return jax.tree_util.tree_map(
+        lambda pl, pg, st: jax.lax.dynamic_update_slice_in_dim(
+            pl, jnp.asarray(pg, pl.dtype), st, axis=1),
+        pool, page, starts)
+
+
+@dataclasses.dataclass
+class _HostPage:
+    """One adapter's packed codes in the host tier: per path, per packed
+    field, a numpy array ``(L, fold, Rp, ·)`` (fold == 1 for plain leaves).
+    ``version`` is the AdapterStore epoch the page was built from."""
+
+    arrays: Dict[str, Dict[str, np.ndarray]]
+    version: int
+    nbytes: int
+
+
+class AdapterMemoryManager:
+    """Two-tier adapter memory for the continuous scheduler.
+
+    * **HBM tier**: ``num_slots`` fixed pages inside persistent per-path
+      stacks ``(L, num_slots·fold, Rp, ·)`` — the arrays the decode program
+      reads through :class:`~repro.kernels.PackedLoRABatch` leaves.
+    * **Host tier**: every registered adapter's packed codes as numpy
+      (:class:`_HostPage`), built lazily per adapter and rebuilt when the
+      store re-registers an id.
+
+    Slot count resolution order: explicit ``num_slots`` →
+    ``store.hbm_budget_bytes // page_bytes`` → growable (starts at the
+    registered-adapter count and doubles on demand — the all-resident
+    behavior of the pre-paging engine, now expressed as "budget = ∞").
+
+    Eviction is LRU over resident, unpinned, unreserved slots. ``pin`` /
+    ``unpin`` are refcounted per adapter id (one count per live batch row);
+    ``prefetch`` reserves its slots until the next prefetch call so a page
+    staged for the upcoming admission cannot be stolen by a later miss in
+    the same window.
+    """
+
+    def __init__(self, store, like_tree, num_slots: Optional[int] = None,
+                 tile_t: int = 8, interpret: bool = True):
+        if num_slots is not None and num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.store = store
+        self.like_tree = like_tree
+        self.requested_slots = num_slots
+        self.tile_t = tile_t
+        self.interpret = interpret
+
+        self._leaf_info: Optional[List[Tuple[str, int, int]]] = None
+        self._meta: Dict[str, Dict[str, Any]] = {}
+        self._host: Dict[str, _HostPage] = {}
+        self._pool: Optional[Dict[str, Dict[str, jax.Array]]] = None
+        self._capacity = 0
+        self._growable = False
+        self._page_bytes: Optional[int] = None
+
+        self._slot_owner: List[Optional[str]] = []
+        self._slot_of: Dict[str, int] = {}
+        self._slot_version: Dict[str, int] = {}
+        self._pins: Dict[str, int] = {}
+        self._reserved: Set[str] = set()
+        self._lru: "collections.OrderedDict[str, None]" = collections.OrderedDict()
+
+        self._tree = None                  # cached serving tree (dirty=None)
+        self._seen_mutations = None
+        self.hits = 0
+        self.misses = 0
+        self.swap_ins = 0
+        self.evictions = 0
+
+    # ----- layout -----
+
+    def _leaves(self) -> List[Tuple[str, int, int]]:
+        """``(path, L, fold)`` for every {'a','b'} leaf of the template.
+        ``fold`` multiplies out extra lead dims (MoE experts) that packing
+        folds into the adapter axis."""
+        if self._leaf_info is None:
+            from repro.serving.engine import _leaf_folds, iter_lora_linears
+
+            folds = _leaf_folds(self.like_tree)   # one fold definition for
+            info = []                             # pages AND packed entries
+            for path, leaf in iter_lora_linears(self.like_tree):
+                shape = tuple(np.shape(leaf["a"]))
+                if len(shape) < 3:
+                    raise NotImplementedError(
+                        f"paged packed serving needs stacked (L, ..., r, in) "
+                        f"leaves; {path} has shape {shape}")
+                info.append((path, int(shape[0]), folds[path]))
+            self._leaf_info = info
+        return self._leaf_info
+
+    def _host_page(self, adapter_id: str) -> _HostPage:
+        """Host-tier page for one adapter, (re)built from the store's
+        quantized entries when absent or stale."""
+        version = self.store.version(adapter_id)
+        if version is None:
+            raise KeyError(f"adapter {adapter_id!r} is not registered")
+        page = self._host.get(adapter_id)
+        if page is not None and page.version == version:
+            return page
+        qa = self.store.quantized[adapter_id]
+        arrays: Dict[str, Dict[str, np.ndarray]] = {}
+        nbytes = 0
+        for path, n_layers, fold in self._leaves():
+            pb = pack_adapter_layers(qa.entries[path], interpret=self.interpret,
+                                     fold=fold)
+            if path not in self._meta:
+                self._meta[path] = {f: getattr(pb, f) for f in _META_FIELDS}
+            fields = {}
+            for f in _ARRAY_FIELDS:
+                arr = np.asarray(getattr(pb, f))
+                # normalize to an explicit fold axis: (L, fold, Rp, ·)
+                fields[f] = arr.reshape((n_layers, fold) + arr.shape[-2:])
+                nbytes += fields[f].nbytes
+            arrays[path] = fields
+        page = _HostPage(arrays=arrays, version=version, nbytes=nbytes)
+        self._host[adapter_id] = page
+        if self._page_bytes is None:
+            self._page_bytes = nbytes
+        return page
+
+    @property
+    def page_bytes(self) -> int:
+        """HBM bytes one adapter slot occupies (uniform across adapters)."""
+        if self._page_bytes is None:
+            if not self.store.quantized:
+                raise RuntimeError("no adapter registered yet: page size "
+                                   "unknown")
+            self._host_page(next(iter(self.store.quantized)))
+        return self._page_bytes
+
+    def _resolve_capacity(self) -> int:
+        if self.requested_slots is not None:
+            return self.requested_slots
+        budget = getattr(self.store, "hbm_budget_bytes", None)
+        if budget is not None:
+            return max(1, int(budget) // max(self.page_bytes, 1))
+        self._growable = True
+        return max(1, len(self.store.quantized))
+
+    def _alloc_pool(self, capacity: int):
+        """(Re)allocate the slot stacks at ``capacity`` slots, preserving
+        resident pages (growth path keeps slot ids stable)."""
+        old, old_cap = self._pool, self._capacity
+        pool: Dict[str, Dict[str, jax.Array]] = {}
+        for path, n_layers, fold in self._leaves():
+            ref = self._host[next(iter(self._host))].arrays[path]
+            fields = {}
+            for f in _ARRAY_FIELDS:
+                shape = ((n_layers, capacity * fold) + ref[f].shape[-2:])
+                z = jnp.zeros(shape, ref[f].dtype)
+                if old is not None and old_cap:
+                    z = z.at[:, : old_cap * fold].set(old[path][f])
+                fields[f] = z
+            pool[path] = fields
+        self._pool = pool
+        self._capacity = capacity
+        self._slot_owner.extend([None] * (capacity - len(self._slot_owner)))
+        self._tree = None
+
+    def _ensure_pool(self, adapter_id: Optional[str] = None):
+        if self._pool is not None:
+            return
+        if adapter_id is not None:
+            self._host_page(adapter_id)     # learn page shapes/bytes first
+        else:
+            _ = self.page_bytes
+        self._alloc_pool(self._resolve_capacity())
+
+    # ----- slot accounting -----
+
+    @property
+    def num_slots(self) -> int:
+        self._ensure_pool()
+        return self._capacity
+
+    def resident(self, adapter_id: str) -> bool:
+        """True when the adapter's *current* codes occupy a slot."""
+        return (adapter_id in self._slot_of
+                and self._slot_version.get(adapter_id)
+                == self.store.version(adapter_id))
+
+    def slot_of(self, adapter_id: str) -> int:
+        return self._slot_of[adapter_id]
+
+    def pin(self, adapter_id: str):
+        self._pins[adapter_id] = self._pins.get(adapter_id, 0) + 1
+
+    def unpin(self, adapter_id: str):
+        n = self._pins.get(adapter_id, 0) - 1
+        if n <= 0:
+            self._pins.pop(adapter_id, None)
+        else:
+            self._pins[adapter_id] = n
+
+    def pinned(self, adapter_id: str) -> bool:
+        return self._pins.get(adapter_id, 0) > 0
+
+    def _free_slot(self, adapter_id: str):
+        slot = self._slot_of.pop(adapter_id)
+        self._slot_owner[slot] = None
+        self._slot_version.pop(adapter_id, None)
+        self._lru.pop(adapter_id, None)
+        self._reserved.discard(adapter_id)
+
+    def _find_slot(self) -> Optional[int]:
+        """A free slot, else the LRU unpinned/unreserved victim's slot, else
+        grow (unbounded mode only), else None."""
+        for slot, owner in enumerate(self._slot_owner):
+            if owner is None:
+                return slot
+        for aid in self._lru:              # least-recent first
+            if not self.pinned(aid) and aid not in self._reserved:
+                slot = self._slot_of[aid]
+                self._free_slot(aid)
+                self.evictions += 1
+                return slot
+        if self._growable:
+            slot = self._capacity
+            self._alloc_pool(max(2 * self._capacity, 1))
+            return slot
+        return None
+
+    def _swap_in(self, adapter_id: str, slot: int):
+        """Issue the host→HBM copy of one page into ``slot`` as ONE jitted
+        dispatch over every leaf array. Functional update: the previous
+        pool buffers stay valid for any already-dispatched step, the
+        next-built tree reads the new ones."""
+        page = self._host_page(adapter_id)
+        starts = {path: {f: jnp.int32(slot * fold) for f in _ARRAY_FIELDS}
+                  for path, _, fold in self._leaves()}
+        self._pool = _page_write(self._pool, page.arrays, starts)
+        self._slot_owner[slot] = adapter_id
+        self._slot_of[adapter_id] = slot
+        self._slot_version[adapter_id] = page.version
+        self._lru[adapter_id] = None
+        self._lru.move_to_end(adapter_id)
+        self.swap_ins += 1
+        self._tree = None
+
+    # ----- engine-facing operations -----
+
+    def acquire(self, adapter_id: str, pin: bool = True) -> Optional[int]:
+        """Map an adapter to a resident slot for admission.
+
+        Hit: touch LRU, pin, return the slot. Miss: claim a free/evictable
+        slot, issue the swap-in (the admission that follows is queued behind
+        it by dispatch order), pin, return the slot. Returns ``None`` when
+        every slot is pinned or reserved — the caller leaves the request
+        pending and retries next step.
+        """
+        self._ensure_pool(adapter_id)
+        if self.resident(adapter_id):
+            self.hits += 1
+            slot = self._slot_of[adapter_id]
+        else:
+            if adapter_id in self._slot_of:        # resident but stale codes
+                slot = self._slot_of[adapter_id]   # reload in place
+            else:
+                slot = self._find_slot()
+                if slot is None:
+                    return None                    # retried next step — not
+            self.misses += 1                       # charged as a miss
+            self._swap_in(adapter_id, slot)
+        self._lru[adapter_id] = None
+        self._lru.move_to_end(adapter_id)
+        self._reserved.discard(adapter_id)
+        if pin:
+            self.pin(adapter_id)
+        return slot
+
+    def prefetch(self, adapter_ids: Sequence[str]):
+        """Stage the next admission wave's pages one step ahead.
+
+        Call *after* building this step's decode view and *before*
+        dispatching it: the swap-ins write fresh buffers, so the in-flight
+        decode (reading the old ones) and the transfers overlap. Staged
+        slots are reserved — ineligible for eviction — until the next
+        prefetch call re-derives the reservation set. Misses here are not
+        charged to the hit-rate (only admission-time :meth:`acquire` is).
+        """
+        reserved: Set[str] = set()
+        for aid in adapter_ids:
+            if self.store.version(aid) is None:
+                continue
+            self._ensure_pool(aid)
+            if not self.resident(aid):
+                if aid in self._slot_of:
+                    slot = self._slot_of[aid]
+                else:
+                    self._reserved = reserved      # protect earlier stages
+                    slot = self._find_slot()
+                    if slot is None:
+                        continue
+                self._swap_in(aid, slot)
+            self._lru[aid] = None
+            self._lru.move_to_end(aid)
+            reserved.add(aid)
+        self._reserved = reserved
+
+    def refresh(self):
+        """Reconcile with store mutations (register / re-register /
+        unregister) since the last call. Unregistered adapters lose their
+        host page immediately and their slot once unpinned (a live row keeps
+        serving the codes already in its pinned slot until it retires);
+        re-registered pinned adapters are reloaded in place so active rows
+        serve the newest weights, matching the pack-cache invalidation
+        semantics of the all-resident path."""
+        mutations = self.store.mutation_count()
+        if mutations == self._seen_mutations:
+            return
+        self._seen_mutations = mutations
+        for aid in list(self._slot_of):
+            version = self.store.version(aid)
+            if version is None:
+                self._host.pop(aid, None)
+                if not self.pinned(aid):
+                    self._free_slot(aid)
+            elif version != self._slot_version.get(aid):
+                if self.pinned(aid):
+                    self._swap_in(aid, self._slot_of[aid])
+                else:
+                    self._free_slot(aid)
+        for aid in list(self._host):
+            if self.store.version(aid) is None:
+                self._host.pop(aid, None)
+
+    # ----- the device view -----
+
+    def serving_tree(self):
+        """The lora tree the engine feeds the model: ``like_tree`` mirrored
+        with :class:`PackedLoRABatch` leaves over the slot stacks. Rebuilt
+        only after a swap-in/growth changed the pool (cheap dataclass
+        construction; array buffers are shared, so an unchanged tree keeps
+        its identity and the engine's retile cache stays warm)."""
+        self._ensure_pool()
+        if self._tree is not None:
+            return self._tree
+
+        def rebuild(node, path):
+            if isinstance(node, dict):
+                if set(node.keys()) == {"a", "b"}:
+                    fields = dict(self._pool[path])
+                    meta = self._meta[path]
+                    return PackedLoRABatch(
+                        **fields, seg=None, **meta,
+                        tile_t=self.tile_t, interpret=self.interpret)
+                return {k: rebuild(v, f"{path}/{k}") for k, v in node.items()}
+            if isinstance(node, list):
+                return [rebuild(v, f"{path}/{i}") for i, v in enumerate(node)]
+            if isinstance(node, tuple):
+                return tuple(rebuild(v, f"{path}/{i}")
+                             for i, v in enumerate(node))
+            return node
+
+        self._tree = rebuild(self.like_tree, "")
+        return self._tree
+
+    # ----- accounting -----
+
+    def hbm_bytes(self) -> int:
+        """Bytes of the HBM slot pool — a function of the slot count, not of
+        how many adapters are registered."""
+        if self._pool is None:
+            return 0
+        return sum(arr.size * arr.dtype.itemsize
+                   for fields in self._pool.values()
+                   for arr in fields.values())
+
+    def host_bytes(self) -> int:
+        return sum(p.nbytes for p in self._host.values())
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "slots": self._capacity,
+            "resident": len(self._slot_of),
+            "pinned": len(self._pins),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 1.0,
+            "swap_ins": self.swap_ins,
+            "evictions": self.evictions,
+            "hbm_slot_mb": self.hbm_bytes() / 1e6,
+            "host_tier_mb": self.host_bytes() / 1e6,
+        }

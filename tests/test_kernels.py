@@ -302,6 +302,33 @@ def test_sgmv_packed_requires_seg():
         sgmv_apply_packed(x, pb)
 
 
+def test_sgmv_packed_folded_expert_axis_vs_ref():
+    """Extra-lead-dim leaves (MoE per-expert adapters): entries packed with
+    fold=E land at index a·E + e of the stacked adapter axis, and folded
+    seg ids gather exactly the (adapter, expert) codes — the layout the MoE
+    dispatch consumes at tile_t=1."""
+    m, n, r, e_dim, na = 128, 256, 8, 3, 2
+    qls = [[_decayed_qlora(m, n, r, rho=0.8 + 0.05 * e, seed=90 + 10 * a + e)
+            for e in range(e_dim)] for a in range(na)]
+    # per adapter: one layer × E experts in row-major (layer, expert) order
+    entries = [pack_adapter_layers(qls[a], fold=e_dim) for a in range(na)]
+    assert entries[0].ah_codes.shape[:2] == (1, e_dim)   # (L, fold, Rp, ·)
+    pb = stack_packed_adapters(entries, tile_t=1)
+    assert pb.fold == e_dim
+    assert pb.ah_codes.shape[:2] == (1, na * e_dim)      # (L, NA·fold, ·)
+    pb = jax.tree_util.tree_map(lambda x: x[0], pb)      # drop the L axis
+
+    pairs = [(1, 2), (0, 0), (1, 0), (0, 1)]             # (adapter, expert)
+    folded = jnp.asarray(np.asarray([a * e_dim + e for a, e in pairs],
+                                    np.int32))
+    x = _rand((len(pairs), n), jnp.float32, seed=91)
+    got = sgmv_apply_packed(x, dataclasses.replace(pb, seg=folded))
+    for i, (a, e) in enumerate(pairs):
+        want = np.asarray(x[i] @ qls[a][e].delta_w().T)
+        np.testing.assert_allclose(np.asarray(got[i]), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
 # --------------------------------------------------------------------------
 # tile-size regression (K > cap whose 2^i·cap chain has no ≥128 divisor)
 # --------------------------------------------------------------------------

@@ -1,0 +1,237 @@
+"""Paged adapter memory (serving/memory.py): HBM slot pool + host tier.
+
+Covers the acceptance scenario — budget-constrained serving (slots ≪
+registered adapters, forced eviction + re-fault mid-run) token-for-token
+identical to all-resident packed serving with the packed HBM footprint
+bounded by the slot budget — plus pinning, prefetch reservations,
+budget-derived slot counts, and a Zipf churn smoke."""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_cfg
+from repro.core import LoRAQuantConfig
+from repro.launch.serve import random_trained_lora
+from repro.models import build_model
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.memory import AdapterMemoryManager
+
+N_ADAPTERS = 16
+
+
+def _aid(i: int) -> str:
+    return f"u{i:02d}"
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Tiny llama + one store with 16 registered adapters (the ISSUE's
+    NA ≥ 16 scale), onboarded in one bucketed dispatch."""
+    cfg = smoke_cfg("llama3.2-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    trees = {_aid(i): random_trained_lora(params["lora"],
+                                          jax.random.PRNGKey(100 + i),
+                                          scale=0.05)
+             for i in range(N_ADAPTERS)}
+    store.register_many(trees)
+    return cfg, model, params, store
+
+
+def _requests(cfg, adapter_seq, seed=0, max_new=2, plen=6):
+    rng = np.random.default_rng(seed)
+    return [Request(request_id=i, adapter_id=aid,
+                    prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, aid in enumerate(adapter_seq)]
+
+
+def _run(model, params, store, reqs, slots, max_rows=4):
+    eng = MultiLoRAEngine(model, params, store, cache_capacity=32,
+                          max_rows=max_rows, hbm_slots=slots)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    return {r.request_id: r.output for r in done}, eng
+
+
+def test_budget_constrained_matches_all_resident(served):
+    """Acceptance: slots = ceil(NA/4) over NA = 16 adapters — every request
+    token-for-token identical to the all-resident run, with forced
+    evictions + re-faults mid-run and the packed HBM bytes bounded by the
+    slot budget, not by NA."""
+    cfg, model, params, store = served
+    seq = [_aid(i) for i in range(N_ADAPTERS)]       # every adapter once
+    seq += [_aid(3), _aid(7), _aid(0)]               # re-fault evicted pages
+    slots = math.ceil(N_ADAPTERS / 4)
+    got, eng = _run(model, params, store, _requests(cfg, seq, seed=1), slots)
+    ref, ref_eng = _run(model, params, store, _requests(cfg, seq, seed=1),
+                        None)
+    assert got.keys() == ref.keys()
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid])
+
+    mem = eng.memory_stats()
+    page = eng.memory.page_bytes
+    assert mem["slots"] == slots
+    assert eng.memory.hbm_bytes() == slots * page     # bounded by the budget
+    assert eng.memory.hbm_bytes() < N_ADAPTERS * page  # NOT by the registry
+    assert mem["evictions"] > 0                       # pool actually churned
+    assert mem["swap_ins"] >= N_ADAPTERS              # every page faulted in
+    # the all-resident pool holds every adapter and never evicts
+    assert ref_eng.memory_stats()["evictions"] == 0
+    assert ref_eng.memory.hbm_bytes() >= N_ADAPTERS * page
+    # neither run ever dequantized anything
+    assert store.fp_resident_bytes() == 0
+
+
+def test_single_slot_eviction_and_refault(served):
+    """slots=1, serial rows: the second adapter evicts the first, the
+    revisit re-faults it — still token-identical to all-resident."""
+    cfg, model, params, store = served
+    seq = [_aid(0), _aid(1), _aid(0)]
+    got, eng = _run(model, params, store, _requests(cfg, seq, seed=2),
+                    slots=1, max_rows=1)
+    ref, _ = _run(model, params, store, _requests(cfg, seq, seed=2),
+                  None, max_rows=1)
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid])
+    mem = eng.memory_stats()
+    assert mem["slots"] == 1
+    assert mem["misses"] == 3 and mem["hits"] == 0    # u00 re-faulted
+    assert mem["evictions"] == 2
+
+
+def test_pinned_slot_never_evicted_while_row_live(served):
+    """A long-running row pins its adapter's slot; short requests churning
+    the other slot must never steal it, and the long row's output matches
+    a solo run."""
+    cfg, model, params, store = served
+    long_req = _requests(cfg, [_aid(0)], seed=3, max_new=10)[0]
+    solo, _ = _run(model, params, store,
+                   _requests(cfg, [_aid(0)], seed=3, max_new=10), None,
+                   max_rows=2)
+
+    eng = MultiLoRAEngine(model, params, store, cache_capacity=32,
+                          max_rows=2, hbm_slots=2)
+    eng.submit(long_req)
+    eng.step()                                       # long admitted + pinned
+    mgr = eng.memory
+    s_long = mgr.slot_of(_aid(0))
+    assert mgr.pinned(_aid(0))
+    shorts = _requests(cfg, [_aid(i) for i in (1, 2, 3, 4)], seed=4,
+                       max_new=1)
+    for r in shorts:
+        r.request_id += 1
+        eng.submit(r)
+    done = []
+    while eng.pending or eng.active_rows:
+        done += eng.step()
+        # the pinned slot is untouched while the row lives
+        if any(r is not None and r.req is long_req for r in eng._rows):
+            assert mgr.slot_of(_aid(0)) == s_long
+            assert mgr._slot_owner[s_long] == _aid(0)
+    got = {r.request_id: r.output for r in done}
+    np.testing.assert_array_equal(got[long_req.request_id], solo[0])
+    # the four shorts churned through the single unpinned slot
+    assert eng.memory_stats()["evictions"] >= 3
+    assert not mgr.pinned(_aid(0))                   # unpinned at retirement
+
+
+def test_zipf_churn_smoke(served):
+    """Zipf(α=1) adapter popularity over a half-size pool: everything
+    completes, the head of the distribution hits, the tail faults."""
+    cfg, model, params, store = served
+    rng = np.random.default_rng(7)
+    p = 1.0 / np.arange(1, N_ADAPTERS + 1)           # Zipf α=1, truncated
+    seq = [_aid(i) for i in rng.choice(N_ADAPTERS, size=12, p=p / p.sum())]
+    got, eng = _run(model, params, store, _requests(cfg, seq, seed=8),
+                    slots=N_ADAPTERS // 4, max_rows=4)
+    assert len(got) == len(seq)
+    assert all(v.shape == (2,) for v in got.values())
+    mem = eng.memory_stats()
+    assert mem["hits"] + mem["misses"] == len(seq)
+    assert 0.0 <= mem["hit_rate"] <= 1.0
+    assert mem["swap_ins"] >= mem["misses"] > 0
+
+
+# ----- manager unit semantics (no engine) -----
+
+
+def _mini_store(src_store, params, n=4, budget=None):
+    """A store reusing already-quantized adapters (no re-quantization)."""
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0),
+                         hbm_budget_bytes=budget)
+    for aid in [_aid(i) for i in range(n)]:
+        store.register_quantized(aid, src_store.quantized[aid])
+    return store
+
+
+def test_acquire_pin_evict_semantics(served):
+    cfg, model, params, store0 = served
+    store = _mini_store(store0, params)
+    mgr = AdapterMemoryManager(store, params["lora"], num_slots=2)
+    s0 = mgr.acquire(_aid(0))
+    s1 = mgr.acquire(_aid(1))
+    assert {s0, s1} == {0, 1}
+    assert mgr.acquire(_aid(2)) is None              # every slot pinned
+    mgr.unpin(_aid(1))
+    s2 = mgr.acquire(_aid(2))                        # LRU victim is u01
+    assert s2 == s1
+    assert not mgr.resident(_aid(1)) and mgr.resident(_aid(2))
+    st = mgr.stats()
+    assert st["evictions"] == 1 and st["misses"] == 3
+    # re-acquiring the resident page is a hit on the same slot
+    assert mgr.acquire(_aid(0)) == s0
+    assert mgr.stats()["hits"] == 1
+
+
+def test_prefetch_reserves_staged_pages(served):
+    cfg, model, params, store0 = served
+    store = _mini_store(store0, params)
+    mgr = AdapterMemoryManager(store, params["lora"], num_slots=2)
+    mgr.acquire(_aid(0))                             # pinned
+    mgr.prefetch([_aid(1)])                          # staged + reserved
+    assert mgr.resident(_aid(1)) and not mgr.pinned(_aid(1))
+    # a later miss cannot steal the reserved page (or the pinned one)
+    assert mgr.acquire(_aid(2)) is None
+    # admission of the staged adapter is a hit and clears the reservation
+    slot = mgr.acquire(_aid(1))
+    assert slot == mgr.slot_of(_aid(1))
+    assert mgr.stats()["hits"] == 1
+    mgr.unpin(_aid(1))
+    assert mgr.acquire(_aid(2)) == slot              # now evictable
+
+
+def test_hbm_budget_derives_slot_count(served):
+    cfg, model, params, store0 = served
+    probe = AdapterMemoryManager(_mini_store(store0, params, n=1),
+                                 params["lora"], num_slots=1)
+    page = probe.page_bytes
+    store = _mini_store(store0, params, budget=2 * page + page // 2)
+    mgr = AdapterMemoryManager(store, params["lora"])
+    assert mgr.num_slots == 2                        # floor(2.5 pages)
+    assert mgr.hbm_bytes() == 2 * page
+
+
+def test_unbounded_pool_grows_for_new_registrations(served):
+    cfg, model, params, store0 = served
+    store = _mini_store(store0, params, n=2)
+    mgr = AdapterMemoryManager(store, params["lora"])   # growable
+    mgr.acquire(_aid(0), pin=False)
+    mgr.acquire(_aid(1), pin=False)
+    assert mgr.num_slots == 2
+    store.register_quantized(_aid(9), store0.quantized[_aid(9)])
+    mgr.refresh()
+    # pool is full but unbounded: the new adapter grows it instead of
+    # evicting, and existing slot ids stay stable
+    mgr.pin(_aid(0)), mgr.pin(_aid(1))
+    s0, s1 = mgr.slot_of(_aid(0)), mgr.slot_of(_aid(1))
+    s9 = mgr.acquire(_aid(9))
+    assert mgr.num_slots > 2 and s9 not in (s0, s1)
+    assert mgr.slot_of(_aid(0)) == s0 and mgr.slot_of(_aid(1)) == s1
+    assert mgr.stats()["evictions"] == 0

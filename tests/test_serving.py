@@ -379,36 +379,118 @@ def test_left_padded_batch_matches_unpadded_serving(tiny_model, served_store):
         np.testing.assert_array_equal(got[rid], want[rid])
 
 
-def test_moe_extra_lead_dims_fall_back_to_materialize(tmp_path):
-    """Regression: MoE per-expert adapter leaves ((L, E, r, in)) used to
-    crash packed serving with NotImplementedError; the engine now degrades
-    to the fp materialize path with a one-time warning."""
+def test_moe_extra_lead_dims_packed_parity():
+    """MoE per-expert adapter leaves ((L, E, r, in)) are served PACKED: the
+    expert axis folds into the adapter axis of the SGMV stack (no fp
+    materialization, no fallback warning), token-for-token equal to the fp
+    segment-loop reference.
+
+    The capacity factor is raised to n_experts so no token-choice capacity
+    drop occurs: drops are batch-composition-dependent (the materialize
+    reference batches per adapter, packed batches all rows together), so
+    exact cross-mode parity is only defined drop-free."""
     cfg = smoke_cfg("mixtral-8x22b")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     assert any(np.ndim(leaf["a"]) != 3
                for _, leaf in iter_lora_linears(params["lora"]))
     store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
-    store.register("moe_user", random_trained_lora(
-        params["lora"], jax.random.PRNGKey(7)))
+    for i in range(2):                   # two adapters: fold × seg interplay
+        store.register(f"moe_u{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(7 + i), scale=0.05))
     engine = MultiLoRAEngine(model, params, store, cache_capacity=32)
-    for r in _mk_requests(cfg, 2, 1, seed=3, prompt_lens=[8, 8],
-                          max_new=[2, 2]):
-        r.adapter_id = "moe_user"
-        engine.submit(r)
-    with pytest.warns(UserWarning, match="extra lead dims"):
-        done = engine.run()                       # default continuous mode
-    assert len(done) == 2 and all(r.output is not None for r in done)
-    assert store.fp_resident_bytes() > 0          # served via the fp path
-    # the warning fires once; a second batch runs silently
+
     import warnings as _w
 
-    for r in _mk_requests(cfg, 1, 1, seed=4, prompt_lens=[8], max_new=[2]):
-        r.adapter_id = "moe_user"
+    def batch():
+        return _mk_requests(cfg, 3, 2, seed=3, prompt_lens=[8, 8, 8],
+                            max_new=[2, 3, 2])
+
+    for r in batch():
+        r.adapter_id = f"moe_u{r.request_id % 2}"
         engine.submit(r)
     with _w.catch_warnings():
-        _w.simplefilter("error")
-        assert len(engine.run(mode="packed")) == 1
+        _w.simplefilter("error")                  # no fallback warning
+        done = engine.run()                       # default continuous mode
+    cont = {r.request_id: r.output for r in done}
+    assert len(cont) == 3
+    assert store.fp_resident_bytes() == 0         # served from packed codes
+
+    for r in batch():
+        r.adapter_id = f"moe_u{r.request_id % 2}"
+        engine.submit(r)
+    ref = {r.request_id: r.output
+           for r in engine.run(mode="materialize")}
+    assert store.fp_resident_bytes() > 0
+    assert cont.keys() == ref.keys()
+    for rid in ref:
+        np.testing.assert_array_equal(cont[rid], ref[rid])
+
+
+def test_unregister_removes_adapter_and_caches(tiny_model):
+    """AdapterStore.unregister: the adapter stops being admittable, every
+    cache tier (fp LRU, packed layouts, batch trees) drops it, and the
+    paged memory reconciles on the next step."""
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(2):
+        store.register(f"u{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(80 + i)))
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=64)
+    for r in _mk_requests(cfg, 2, 2, seed=5):
+        engine.submit(r)
+    assert len(engine.run()) == 2
+    store.materialize("u0", params["lora"])       # populate the fp LRU too
+    assert engine.memory.resident("u0")
+
+    store.unregister("u0")
+    assert "u0" not in store.quantized and store.version("u0") is None
+    assert len(store._lru) == 0                   # fp LRU entry dropped
+    assert store.packed_cache_bytes() == 0
+    with pytest.raises(KeyError):
+        store.unregister("u0")                    # double-free is an error
+    # a new request for the dropped adapter fails admission loudly
+    engine.submit(_mk_requests(cfg, 1, 1, seed=6)[0])
+    with pytest.raises(KeyError, match="u0"):
+        engine.step()
+    engine.pending.clear()
+    # the paged tier frees the slot and host page on its next step
+    req = _mk_requests(cfg, 1, 1, seed=7)[0]
+    req.adapter_id = "u1"
+    engine.submit(req)
+    assert len(engine.run()) == 1
+    assert not engine.memory.resident("u0")
+    assert "u0" not in engine.memory._host
+
+
+def test_reregister_after_unregister_serves_new_weights(tiny_model):
+    """Regression for the unregister lifecycle: unregister + register of
+    the same id must serve the NEW weights through the paged packed path
+    (a stale page or pack-cache entry would silently serve the old user)."""
+    cfg, model, params = tiny_model
+    t_old = random_trained_lora(params["lora"], jax.random.PRNGKey(85),
+                                scale=0.05)
+    t_new = random_trained_lora(params["lora"], jax.random.PRNGKey(86),
+                                scale=0.05)
+    req = lambda: _mk_requests(cfg, 1, 1, seed=9)[0]
+
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    store.register("u0", t_old)
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=64)
+    engine.submit(req())
+    engine.run()                                  # page for t_old resident
+    store.unregister("u0")
+    store.register("u0", t_new)                   # the user re-uploads
+    engine.submit(req())
+    got = engine.run()[0].output
+
+    fresh_store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    fresh_store.register("u0", t_new)
+    fresh = MultiLoRAEngine(model, params, fresh_store, cache_capacity=64)
+    fresh.submit(req())
+    np.testing.assert_array_equal(got, fresh.run()[0].output)
 
 
 def test_train_driver_smoke(tmp_path):
