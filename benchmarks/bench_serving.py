@@ -330,4 +330,49 @@ def run(report):
     within = frac_runs[50]["tok_s"] >= 0.8 * frac_runs[100]["tok_s"]
     report(f"serving.check,churn_50pct_within_20pct_of_all_resident,"
            f"{'PASS' if within else 'FAIL'}")
+
+    # ---- mixed-recipe churn: the same Zipf stream over a fleet whose
+    # head adapters carry 3-bit recipes and whose tail runs near 1 bit
+    # (per-signature slot pools, real per-adapter page bytes) ----
+    mixed_store = AdapterStore(qcfg)
+    mixed_recipes = {
+        f"user_{i}": (LoRAQuantConfig(rho=0.95, bits_high=3, ste_steps=0)
+                      if i < CHURN_ADAPTERS // 2
+                      else LoRAQuantConfig(rho=1e-6, bits_high=2,
+                                           ste_steps=0))
+        for i in range(CHURN_ADAPTERS)}
+    mixed_store.register_many({
+        f"user_{i}": random_trained_lora(params["lora"],
+                                         jax.random.PRNGKey(30 + i))
+        for i in range(CHURN_ADAPTERS)}, recipes=mixed_recipes)
+
+    mixed = {}
+    for name, slots in (("all_resident", None),
+                        ("slots_50pct", max(1, CHURN_ADAPTERS // 2))):
+        eng = MultiLoRAEngine(model, params, mixed_store, cache_capacity=64,
+                              max_rows=CHURN_ROWS, hbm_slots=slots)
+        _churn_submit(eng)                            # warmup
+        eng.run()
+        done, dt, before, after = _churn_timed(eng)
+        toks = sum(len(r.output) for r in done)
+        mem = {k: after[k] - before[k]
+               for k in ("hits", "misses", "swap_ins", "evictions")}
+        total = mem["hits"] + mem["misses"]
+        mixed[name] = {"outs": {r.request_id: r.output for r in done},
+                       "tok_s": toks / dt}
+        report(f"serving.churn,mixed_recipes_{name},"
+               f"adapters={CHURN_ADAPTERS},"
+               f"recipes={mixed_store.stats()['recipes']:.0f},"
+               f"pools={after['pools']:.0f},slots={after['slots']:.0f},"
+               f"tok_s={toks/dt:.1f}(interpret),"
+               f"hit_rate={mem['hits']/total if total else 1.0:.2f},"
+               f"evictions={mem['evictions']:.0f},"
+               f"hbm_mb={after['hbm_slot_mb']:.3f},"
+               f"avg_bits={mixed_store.stats()['avg_bits']:.2f}")
+    mixed_parity = all(
+        np.array_equal(mixed["slots_50pct"]["outs"][rid],
+                       mixed["all_resident"]["outs"][rid])
+        for rid in mixed["all_resident"]["outs"])
+    report(f"serving.check,churn_mixed_recipe_token_parity,"
+           f"{'PASS' if mixed_parity else 'FAIL'}")
     return tps_p

@@ -39,14 +39,15 @@ def _parse_line(line: str):
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
-                   help="comma-separated subset "
-                        "(table1,table2,fig2,fig3,fig4,fig6,kernels,serving)")
+                   help="comma-separated subset (table1,table2,fig2,fig3,"
+                        "fig4,fig6,kernels,recipes,serving)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write parsed metrics + checks to this JSON file")
     args = p.parse_args(argv)
 
     from . import (
         bench_kernels,
+        bench_recipes,
         bench_serving,
         fig2_split_strategy,
         fig3_ablation,
@@ -58,6 +59,7 @@ def main(argv=None):
 
     suites = {
         "kernels": bench_kernels.run,
+        "recipes": bench_recipes.run,
         "serving": bench_serving.run,
         "table2": table2_avgbits.run,
         "fig6": fig6_memory.run,

@@ -75,3 +75,11 @@ if __name__ == "__main__":
     serve_main(["--arch", "llama3.2-3b", "--adapters", "16", "--requests",
                 "32", "--prompt-len", "16", "--max-new", "4",
                 "--mode", "continuous", "--max-rows", "4", "--slots", "4"])
+    # Mixed-precision fleet (docs/recipes.md): two premium adapters keep
+    # 4- and 3-bit recipes while the rest run the 2-bit default — ONE
+    # batch, one SGMV dispatch per recipe-layout bucket per layer, and the
+    # per-adapter avg_bits column shows the spread.
+    serve_main(["--arch", "llama3.2-3b", "--adapters", "4", "--requests",
+                "8", "--prompt-len", "16", "--max-new", "4",
+                "--mode", "continuous", "--max-rows", "4",
+                "--recipe", "user_0=4@0.95", "--recipe", "user_1=3@0.9"])

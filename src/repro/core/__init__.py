@@ -23,9 +23,11 @@ from .svd_split import (
 from .ste import optimize_pairs
 from .loraquant import (
     LoRAQuantConfig,
+    QuantRecipe,
     QuantizedLoRA,
     adapter_avg_bits,
     dequantize_lora,
+    fit_recipe,
     quantize_adapter_set,
     quantize_lora,
     quantize_lora_pairs,
@@ -54,9 +56,11 @@ __all__ = [
     "svd_reparam_stack",
     "optimize_pairs",
     "LoRAQuantConfig",
+    "QuantRecipe",
     "QuantizedLoRA",
     "adapter_avg_bits",
     "dequantize_lora",
+    "fit_recipe",
     "quantize_adapter_set",
     "quantize_lora",
     "quantize_lora_pairs",

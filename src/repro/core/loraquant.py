@@ -38,6 +38,7 @@ from .svd_split import select_h, split_at, svd_reparam, svd_reparam_stack
 
 __all__ = [
     "LoRAQuantConfig",
+    "QuantRecipe",
     "QuantizedLoRA",
     "quantize_lora",
     "quantize_lora_stack",
@@ -46,13 +47,22 @@ __all__ = [
     "dequantize_lora",
     "quantize_adapter_set",
     "adapter_avg_bits",
+    "fit_recipe",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class LoRAQuantConfig:
     """Hyperparameters of the method. ``variant_name`` renders as the paper's
-    ``LORAQUANT (bits_high@rho)`` notation."""
+    ``LORAQUANT (bits_high@rho)`` notation.
+
+    A config doubles as a per-adapter **quantization recipe** (alias
+    :data:`QuantRecipe`): the serving tier attaches one to every registered
+    adapter instead of hard-wiring one per store, so a deployment can keep
+    premium adapters at 3-4 bits while the long tail runs near 1 bit (see
+    ``docs/recipes.md``). :meth:`for_budget` fits ``(bits_high, rho)`` to a
+    requested average-bits budget — the paper's Table-2 AvgBits axis as an
+    API."""
 
     rho: float = 0.9               # variance-coverage ratio (Eq. 5)
     bits_high: int = 2             # RTN bitwidth for the important sub-LoRA
@@ -68,6 +78,26 @@ class LoRAQuantConfig:
     @property
     def variant_name(self) -> str:
         return f"loraquant({self.bits_high}@{self.rho:g})"
+
+    @property
+    def layout_signature(self) -> tuple:
+        """What determines the *packed storage layout* of an adapter
+        quantized under this recipe: RTN width, group size, low-side width.
+        Two adapters share one SGMV stack / one paged-memory slot pool iff
+        their signatures match; ``rho`` (and the refine knobs) change only
+        the values inside the layout, never its shape."""
+        return (self.bits_high, self.group_size, self.bits_low)
+
+    @classmethod
+    def for_budget(cls, adapters, target_avg_bits: float,
+                   **overrides) -> "LoRAQuantConfig":
+        """Fit a recipe to an average-bits budget for a concrete adapter
+        (:func:`fit_recipe` with this class's defaults as the base)."""
+        return fit_recipe(adapters, target_avg_bits, base=cls(**overrides))
+
+
+# Per-adapter quantization recipe — the serving-facing name of the config.
+QuantRecipe = LoRAQuantConfig
 
 
 @partial(
@@ -312,3 +342,147 @@ def adapter_avg_bits(qset: Dict[str, QuantizedLoRA]) -> float:
     total_bits = sum(q.total_bits() for q in qset.values())
     total_params = sum(q.num_params() for q in qset.values())
     return total_bits / max(total_params, 1)
+
+
+# --------------------------------------------------------------------------
+# budget-fitted recipes (AvgBits as a serving API)
+# --------------------------------------------------------------------------
+
+def _collect_ab_pairs(adapters) -> list:
+    """Normalize every supported adapter description to a flat list of 2-D
+    ``(B (m, r), A (r, n))`` factor pairs:
+
+    * a LoRA tree (nested dicts/lists with ``{'a', 'b'}`` leaves, layer
+      stacks ``(L, ..., r, in)`` flattened to per-layer pairs),
+    * a list of loose ``(B, A)`` pairs,
+    * a single ``(B, A)`` pair.
+    """
+    if isinstance(adapters, tuple) and len(adapters) == 2 and not isinstance(
+            adapters[0], (dict, list, tuple)):
+        adapters = [adapters]
+    pairs = []
+    if isinstance(adapters, (dict, list)) and not (
+            isinstance(adapters, dict) and set(adapters.keys()) == {"a", "b"}):
+        leaves = []
+
+        def walk(node):
+            if isinstance(node, dict):
+                if set(node.keys()) == {"a", "b"}:
+                    leaves.append(node)
+                    return
+                for v in node.values():
+                    walk(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    walk(v)
+
+        walk(adapters)
+        if leaves:
+            for leaf in leaves:
+                a = np.asarray(leaf["a"])
+                b = np.asarray(leaf["b"])
+                if a.ndim == 2:
+                    a, b = a[None], b[None]
+                a2 = a.reshape((-1,) + a.shape[-2:])
+                b2 = b.reshape((-1,) + b.shape[-2:])
+                pairs.extend((b2[i], a2[i]) for i in range(a2.shape[0]))
+            return pairs
+    # loose pair list (or single pair wrapped above)
+    for b, a in adapters:
+        pairs.append((np.asarray(b), np.asarray(a)))
+    return pairs
+
+
+def _stack_singular_values(pairs) -> list:
+    """Per-pair singular values of ``B A``, shape-bucketed so each distinct
+    ``(B, A)`` shape costs ONE compiled stacked SVD dispatch (the fitting
+    analogue of :func:`quantize_lora_stacks`)."""
+    out: list = [None] * len(pairs)
+    buckets: Dict[tuple, list] = {}
+    for i, (b, a) in enumerate(pairs):
+        buckets.setdefault((b.shape, a.shape), []).append(i)
+    for idx in buckets.values():
+        b_cat = jnp.stack([jnp.asarray(pairs[i][0]) for i in idx])
+        a_cat = jnp.stack([jnp.asarray(pairs[i][1]) for i in idx])
+        s = np.asarray(jax.device_get(svd_reparam_stack(b_cat, a_cat).s))
+        for pos, i in enumerate(idx):
+            out[i] = s[pos]
+    return out
+
+
+def _pair_bit_costs(m: int, n: int, r: int, bits_high: int,
+                    group_size: int) -> Tuple[float, float, int]:
+    """Storage bits charged per high / low singular pair of an ``(m, r) x
+    (r, n)`` adapter, mirroring :func:`repro.core.quant.storage_bits`
+    exactly: ``bits`` per weight + 16-bit scale per group (+ a ``bits``-wide
+    zero-point per RTN group). Returns ``(bits_per_high_pair,
+    bits_per_low_pair, denom_params)``; ``total_bits(h) = h·hi +
+    (r_eff - h)·lo``."""
+    from .quant import SCALE_BITS
+
+    g_m = min(group_size, m)
+    g_n = min(group_size, n)
+    groups = -(-m // g_m) + -(-n // g_n)      # B column-groups + A row-groups
+    hi = (m + n) * bits_high + groups * (SCALE_BITS + bits_high)
+    lo = (m + n) * 1 + groups * SCALE_BITS    # binary: no zero-point
+    return hi, lo, r * (m + n)
+
+
+def fit_recipe(
+    adapters,
+    target_avg_bits: float,
+    *,
+    base: Optional[LoRAQuantConfig] = None,
+    bits_high_choices: Tuple[int, ...] = (2, 3, 4),
+    rho_resolution: int = 512,
+) -> LoRAQuantConfig:
+    """Search ``(bits_high, rho)`` for the recipe whose *achieved* AvgBits
+    (paper Eq. 10, including all scale/zero-point overhead) lands closest to
+    ``target_avg_bits`` on a concrete adapter.
+
+    The search needs only the adapters' singular values (one stacked SVD
+    dispatch per distinct leaf shape) — for every candidate ``rho`` the
+    per-layer split ``h`` follows from Eq. 5 and the storage bits follow
+    analytically from the shapes, so no candidate is ever quantized. The
+    fitted recipe's ``avg_bits()`` after real quantization matches the
+    prediction exactly (same integer accounting).
+
+    ``adapters`` accepts a LoRA tree, a list of ``(B, A)`` pairs, or one
+    pair; ``base`` supplies every non-searched field (group size, STE
+    knobs). Returns ``dataclasses.replace(base, bits_high=·, rho=·)``.
+    """
+    base = base if base is not None else LoRAQuantConfig()
+    pairs = _collect_ab_pairs(adapters)
+    if not pairs:
+        raise ValueError("fit_recipe needs at least one (B, A) pair")
+    svals = _stack_singular_values(pairs)
+
+    # Candidate rhos: a dense grid (h(rho) is a step function of the
+    # cumulative variance fractions, so a fine grid enumerates every
+    # reachable per-layer split combination up to grid resolution).
+    grid = np.linspace(1e-6, 1.0, rho_resolution)
+    total_params = 0
+    total_bits = np.zeros((len(bits_high_choices), grid.size))
+    for (b, a), s in zip(pairs, svals):
+        m, r_b = b.shape
+        r_a, n = a.shape
+        r_eff = int(s.shape[0])
+        var = np.asarray(s, np.float64) ** 2
+        tot = var.sum()
+        if tot <= 0.0:
+            hs = np.ones(grid.size, np.int64)
+        else:
+            frac = np.cumsum(var) / tot
+            hs = np.searchsorted(frac, grid - 1e-12) + 1
+            hs = np.clip(hs, 1, r_eff)
+        for bi, bits in enumerate(bits_high_choices):
+            hi, lo, denom = _pair_bit_costs(m, n, r_eff, bits,
+                                            base.group_size)
+            total_bits[bi] += hs * hi + (r_eff - hs) * lo
+        total_params += r_eff * (m + n)
+
+    avg = total_bits / max(total_params, 1)
+    err = np.abs(avg - target_avg_bits)
+    bi, gi = np.unravel_index(np.argmin(err), err.shape)
+    return dataclasses.replace(base, bits_high=int(bits_high_choices[bi]),
+                               rho=float(grid[gi]))

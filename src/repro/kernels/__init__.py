@@ -5,20 +5,24 @@ pure-jnp oracle lives in quant_matmul/ref.py."""
 
 from .quant_matmul import (
     PackedLoRABatch,
+    PackedLoRABuckets,
     lora_apply_quantized,
     pack_adapter_layers,
     retile_packed,
     sgmv_apply,
+    sgmv_apply_buckets,
     sgmv_apply_packed,
     stack_packed_adapters,
 )
 
 __all__ = [
     "PackedLoRABatch",
+    "PackedLoRABuckets",
     "lora_apply_quantized",
     "pack_adapter_layers",
     "retile_packed",
     "sgmv_apply",
+    "sgmv_apply_buckets",
     "sgmv_apply_packed",
     "stack_packed_adapters",
 ]

@@ -1,10 +1,12 @@
 from .ops import (
     PackedLoRABatch,
+    PackedLoRABuckets,
     lora_apply_quantized,
     pack_adapter_layers,
     quant_matmul_rhs,
     retile_packed,
     sgmv_apply,
+    sgmv_apply_buckets,
     sgmv_apply_packed,
     stack_packed_adapters,
 )
@@ -12,11 +14,13 @@ from . import ref
 
 __all__ = [
     "PackedLoRABatch",
+    "PackedLoRABuckets",
     "lora_apply_quantized",
     "pack_adapter_layers",
     "quant_matmul_rhs",
     "retile_packed",
     "sgmv_apply",
+    "sgmv_apply_buckets",
     "sgmv_apply_packed",
     "stack_packed_adapters",
     "ref",

@@ -467,6 +467,70 @@ def retile_packed(tree, tile_t: int):
         one, tree, is_leaf=lambda n: isinstance(n, PackedLoRABatch))
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("buckets", "lookups", "seg"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class PackedLoRABuckets:
+    """A *mixed-recipe* multi-adapter batch: one :class:`PackedLoRABatch`
+    per packed-layout signature (``bits_high`` / group size / low width —
+    see ``LoRAQuantConfig.layout_signature``), plus per-bucket lookup tables
+    mapping the batch-global segment id to that bucket's local adapter
+    index (``-1`` = the adapter lives in another bucket).
+
+    Serving semantics (``docs/recipes.md``): token rows carry ONE global
+    seg id space (adapter order for the static packed path, HBM slot ids
+    under the paged tier); :func:`sgmv_apply_buckets` runs one fused SGMV
+    ``pallas_call`` per bucket over all rows — non-member rows gather a
+    clamped index and are masked out of the accumulated output, which is
+    exact because LoRA is linear. A uniform-recipe batch never constructs
+    this container (``pack_batch`` / ``serving_tree`` return a bare
+    :class:`PackedLoRABatch`), so the homogeneous fast path stays exactly
+    one dispatch per layer.
+
+    Array layout mirrors the single-bucket leaf: every bucket's arrays and
+    each ``(NA_total,)`` lookup are stored with the leading layer axis
+    (``(L, ...)``) so the model's layer scan slices them together; ``seg``
+    is attached late by ``Model._backbone`` like the single-bucket case.
+    """
+
+    buckets: tuple                  # of PackedLoRABatch (seg=None inside)
+    lookups: tuple                  # of (L?, NA_total) int32, -1 = absent
+    seg: Optional[jax.Array] = None
+
+    @property
+    def fold(self) -> int:
+        return self.buckets[0].fold
+
+    @property
+    def tile_t(self) -> int:
+        return self.buckets[0].tile_t
+
+
+def sgmv_apply_buckets(x: jax.Array, pbs: PackedLoRABuckets, *,
+                       scaling: float = 1.0) -> jax.Array:
+    """Mixed-recipe heterogeneous LoRA apply: one fused SGMV dispatch per
+    layout bucket, outputs accumulated with per-row membership masks.
+    ``pbs.seg`` is the per-row *global* segment id; each bucket's lookup
+    remaps it to a bucket-local adapter index."""
+    if pbs.seg is None:
+        raise ValueError("PackedLoRABuckets has no segment ids attached; "
+                         "serve through MultiLoRAEngine (or set lora['seg'])")
+    seg = pbs.seg.astype(jnp.int32)
+    y = None
+    for pb, lut in zip(pbs.buckets, pbs.lookups):
+        local = jnp.take(lut, seg)
+        member = local >= 0
+        yb = sgmv_apply_packed(
+            x, dataclasses.replace(pb, seg=jnp.maximum(local, 0)),
+            scaling=scaling)
+        yb = jnp.where(member[:, None], yb, jnp.zeros_like(yb))
+        y = yb if y is None else y + yb
+    return y.astype(x.dtype)
+
+
 def sgmv_apply_packed(x: jax.Array, pb: PackedLoRABatch, *,
                       scaling: float = 1.0) -> jax.Array:
     """Heterogeneous multi-adapter LoRA apply straight from packed codes.

@@ -30,6 +30,14 @@ def parse_variant(s: str) -> LoRAQuantConfig:
     return LoRAQuantConfig(bits_high=int(m.group(1)), rho=float(m.group(2)))
 
 
+def parse_recipe_override(s: str):
+    """``id=2@0.9`` → (id, recipe): a per-upload recipe override."""
+    if "=" not in s:
+        raise ValueError(f"--recipe must look like user_0=4@0.95, got {s!r}")
+    adapter_id, variant = s.split("=", 1)
+    return adapter_id, parse_variant(variant)
+
+
 def random_trained_lora(template, key, scale=0.02, spectrum_decay=0.3):
     """Synthesize a 'trained' adapter: rank components with a decaying
     spectrum (what SGD produces on real tasks), not flat iid noise — this is
@@ -60,7 +68,20 @@ def main(argv=None):
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--max-new", type=int, default=8)
-    p.add_argument("--variant", default="2@0.9")
+    p.add_argument("--variant", default="2@0.9",
+                   help="default recipe (bits_high@rho) for every upload "
+                        "without a --recipe override")
+    p.add_argument("--recipe", action="append", default=[],
+                   metavar="ID=BITS@RHO",
+                   help="per-upload recipe override, repeatable (e.g. "
+                        "--recipe user_0=4@0.95 --recipe user_1=3@0.9): the "
+                        "named adapter quantizes under its own recipe and "
+                        "serves in the same batch as the rest "
+                        "(docs/recipes.md)")
+    p.add_argument("--target-bits", type=float, default=None,
+                   help="fit the DEFAULT recipe to this average-bits budget "
+                        "per upload (LoRAQuantConfig.for_budget) instead of "
+                        "using --variant; --recipe overrides still win")
     p.add_argument("--mode", default="continuous",
                    choices=("continuous", "packed", "materialize"),
                    help="continuous: step-based scheduler (mid-decode "
@@ -98,14 +119,29 @@ def main(argv=None):
     store = AdapterStore(qcfg, hbm_budget_bytes=budget)
 
     rng = jax.random.PRNGKey(args.seed + 1)
+    recipes = dict(parse_recipe_override(s) for s in args.recipe)
+    upload_ids = {f"user_{i}" for i in range(args.adapters)}
+    unknown = sorted(set(recipes) - upload_ids)
+    if unknown:
+        raise ValueError(f"--recipe overrides for unknown uploads: {unknown} "
+                         f"(uploads are user_0..user_{args.adapters - 1})")
     print(f"[serve] registering {args.adapters} adapters "
-          f"(LoRAQuant {qcfg.bits_high}@{qcfg.rho:g})...")
+          f"(default LoRAQuant {qcfg.bits_high}@{qcfg.rho:g}, "
+          f"{len(recipes)} per-upload overrides)...")
     t0 = time.perf_counter()
     uploads = {}
     for i in range(args.adapters):
         rng, k = jax.random.split(rng)
         uploads[f"user_{i}"] = random_trained_lora(params["lora"], k)
-    store.register_many(uploads)         # one bucketed dispatch per leaf shape
+    if args.target_bits is not None:
+        qcfg = LoRAQuantConfig.for_budget(
+            next(iter(uploads.values())), args.target_bits,
+            ste_steps=qcfg.ste_steps, refine=qcfg.refine)
+        store.default_recipe = qcfg
+        print(f"[serve] fitted default recipe for {args.target_bits} avg "
+              f"bits: {qcfg.variant_name}")
+    # one bucketed dispatch per (recipe, leaf shape)
+    store.register_many(uploads, recipes=recipes)
     print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
           f"store stats: {store.stats()}")
 
@@ -129,13 +165,18 @@ def main(argv=None):
           f"fp-resident LoRA bytes: {store.fp_resident_bytes()}")
     mem = engine.memory_stats()
     if mem:
-        print(f"[serve] adapter memory: {mem['slots']} slots "
+        print(f"[serve] adapter memory: {mem['slots']} slots in "
+              f"{mem['pools']:.0f} pool(s) "
               f"({mem['hbm_slot_mb']:.3f} MB HBM) over "
               f"{store.stats()['adapters']:.0f} adapters "
               f"({mem['host_tier_mb']:.3f} MB host tier); "
               f"hit rate {mem['hit_rate']:.2f}, "
               f"swap-ins {mem['swap_ins']:.0f}, "
               f"evictions {mem['evictions']:.0f}")
+    per = store.adapter_stats()
+    col = " ".join(f"{aid}={st['avg_bits']:.2f}"
+                   for aid, st in sorted(per.items()))
+    print(f"[serve] per-adapter avg_bits: {col}")
     print(f"[serve] sample output (req 0): {done[0].output.tolist()}")
     return done
 

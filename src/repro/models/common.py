@@ -171,12 +171,15 @@ def linear(
       **slot** ids under the paged memory tier (``docs/adapter_memory.md``);
       leaves with a folded extra lead dim (MoE experts, ``fold > 1``) are
       consumed by the MoE dispatch in ``models/ffn.py`` instead, which
-      builds folded ``(adapter, expert)`` seg ids per dispatch-buffer row."""
+      builds folded ``(adapter, expert)`` seg ids per dispatch-buffer row;
+    * ``repro.kernels.PackedLoRABuckets`` — a *mixed-recipe* batch: one
+      stack per packed-layout signature, dispatched as one SGMV call per
+      bucket with per-row membership masks (``docs/recipes.md``)."""
     y = x @ base["w"]
     if lora is None:
         return y
     from repro.core.loraquant import QuantizedLoRA
-    from repro.kernels import PackedLoRABatch
+    from repro.kernels import PackedLoRABatch, PackedLoRABuckets
 
     if isinstance(lora, QuantizedLoRA):
         from repro.kernels import lora_apply_quantized
@@ -190,6 +193,12 @@ def linear(
 
         x2 = x.reshape(-1, x.shape[-1])
         upd = sgmv_apply_packed(x2, lora, scaling=scaling)
+        return y + upd.reshape(y.shape).astype(y.dtype)
+    if isinstance(lora, PackedLoRABuckets):
+        from repro.kernels import sgmv_apply_buckets
+
+        x2 = x.reshape(-1, x.shape[-1])
+        upd = sgmv_apply_buckets(x2, lora, scaling=scaling)
         return y + upd.reshape(y.shape).astype(y.dtype)
     xl = x.astype(lora["a"].dtype)
     upd = (xl @ lora["a"].T) @ lora["b"].T

@@ -215,7 +215,11 @@ def _expert_ffw(ex, lex, name, inp, scaling, buf_seg=None):
     y = jnp.einsum("ecd,edf->ecf", inp, w)
     if lex is not None:
         leaf = lex[name]
-        from repro.kernels import PackedLoRABatch, sgmv_apply_packed
+        from repro.kernels import (
+            PackedLoRABatch,
+            PackedLoRABuckets,
+            sgmv_apply_packed,
+        )
 
         if isinstance(leaf, PackedLoRABatch):
             import dataclasses as _dc
@@ -227,6 +231,26 @@ def _expert_ffw(ex, lex, name, inp, scaling, buf_seg=None):
             upd = sgmv_apply_packed(inp.reshape(e * c, -1), pb,
                                     scaling=scaling)
             return y + upd.reshape(y.shape).astype(y.dtype)
+        if isinstance(leaf, PackedLoRABuckets):
+            # mixed-recipe experts: the lookup remaps the *adapter*-level
+            # global seg id to each bucket's local index, the expert index
+            # folds in bucket-locally, and non-member rows mask out of the
+            # accumulated update (exact — LoRA is linear)
+            import dataclasses as _dc
+
+            e, c, _ = inp.shape
+            expert_of_row = jnp.repeat(jnp.arange(e, dtype=jnp.int32), c)
+            upd = None
+            for pb, lut in zip(leaf.buckets, leaf.lookups):
+                local = jnp.take(lut, buf_seg.astype(jnp.int32))
+                member = local >= 0
+                folded = jnp.maximum(local, 0) * pb.fold + expert_of_row
+                pb2 = _dc.replace(pb, seg=folded, tile_t=1)
+                u = sgmv_apply_packed(inp.reshape(e * c, -1), pb2,
+                                      scaling=scaling)
+                u = jnp.where(member[:, None], u, jnp.zeros_like(u))
+                upd = u if upd is None else upd + u
+            return y + upd.reshape(y.shape).astype(y.dtype)
         la, lb = leaf["a"], leaf["b"]                     # (E, r, in), (E, out, r)
         upd = jnp.einsum("ecr,eor->eco", jnp.einsum(
             "ecd,erd->ecr", inp.astype(la.dtype), la), lb)
@@ -236,8 +260,9 @@ def _expert_ffw(ex, lex, name, inp, scaling, buf_seg=None):
 
 def _moe_dense_dispatch(x_loc, gate_loc, idx_loc, ex, lex, e, k, cap, scaling):
     """Sort-gather-scatter token-choice dispatch on one device's tokens."""
-    from repro.kernels import PackedLoRABatch
+    from repro.kernels import PackedLoRABatch, PackedLoRABuckets
 
+    _packed_kinds = (PackedLoRABatch, PackedLoRABuckets)
     tok = x_loc.shape[0]
     d = x_loc.shape[1]
     flat_e = idx_loc.reshape(-1)                          # (tok·k,)
@@ -249,7 +274,7 @@ def _moe_dense_dispatch(x_loc, gate_loc, idx_loc, ex, lex, e, k, cap, scaling):
     buf = buf[:-1].reshape(e, cap, d)
 
     buf_seg = None
-    if lex is not None and any(isinstance(l, PackedLoRABatch)
+    if lex is not None and any(isinstance(l, _packed_kinds)
                                for l in lex.values()):
         # per-token adapter segment ids ride the packed leaves (attached by
         # Model._backbone); permute them through the same gather/scatter so
@@ -257,7 +282,7 @@ def _moe_dense_dispatch(x_loc, gate_loc, idx_loc, ex, lex, e, k, cap, scaling):
         # land on the sentinel row (sliced off); empty capacity slots keep
         # seg 0, harmless since LoRA is linear and their x rows are zero.
         seg_tok = next(l.seg for l in lex.values()
-                       if isinstance(l, PackedLoRABatch))
+                       if isinstance(l, _packed_kinds))
         gathered_seg = seg_tok[src_tok[order]].astype(jnp.int32)
         buf_seg = (jnp.zeros((e * cap + 1,), jnp.int32)
                    .at[dest].set(gathered_seg))[:-1]
@@ -315,9 +340,10 @@ def _moe_shard_map(xf, gate, top_idx, base, lora, cfg, mesh, fsdp_axes,
     cap_loc = max(int(np.ceil(tok_loc * k / e * mc.capacity_factor)), 8)
     lex = lora.get("experts") if (lora and mc.lora_on_experts) else None
     if lex is not None:
-        from repro.kernels import PackedLoRABatch
+        from repro.kernels import PackedLoRABatch, PackedLoRABuckets
 
-        if any(isinstance(l, PackedLoRABatch) for l in lex.values()):
+        if any(isinstance(l, (PackedLoRABatch, PackedLoRABuckets))
+               for l in lex.values()):
             raise NotImplementedError(
                 "packed multi-adapter expert LoRA is a serving-path feature "
                 "(no mesh); under shard_map serve with mode='materialize'")

@@ -276,14 +276,15 @@ class Model:
         whose leaves are :class:`repro.kernels.PackedLoRABatch`."""
         import dataclasses as _dc
 
-        from repro.kernels import PackedLoRABatch
+        from repro.kernels import PackedLoRABatch, PackedLoRABuckets
 
+        kinds = (PackedLoRABatch, PackedLoRABuckets)
         seg_l = jnp.broadcast_to(seg, (count,) + seg.shape)
         return jax.tree_util.tree_map(
             lambda leaf: (_dc.replace(leaf, seg=seg_l)
-                          if isinstance(leaf, PackedLoRABatch) else leaf),
+                          if isinstance(leaf, kinds) else leaf),
             group_lora,
-            is_leaf=lambda n: isinstance(n, PackedLoRABatch))
+            is_leaf=lambda n: isinstance(n, kinds))
 
     def _backbone(self, params, x, positions, caches, cache_pos,
                   pad_mask=None, valid_start=None):

@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -52,12 +53,14 @@ import numpy as np
 
 from repro.core import (
     LoRAQuantConfig,
+    QuantRecipe,
     QuantizedLoRA,
     quantize_lora,
     quantize_lora_stacks,
 )
 from repro.kernels import (
     PackedLoRABatch,
+    PackedLoRABuckets,
     pack_adapter_layers,
     retile_packed,
     stack_packed_adapters,
@@ -89,11 +92,24 @@ class QuantizedAdapter:
 
     Stacked layer dims (from scan) are quantized per-layer: a LoRA leaf pair
     a: (L, r, in), b: (L, out, r) becomes L independent QuantizedLoRA entries
-    (the paper treats every layer's adapter separately).
+    (the paper treats every layer's adapter separately). ``recipe`` is the
+    per-adapter :class:`~repro.core.QuantRecipe` it was quantized under.
     """
 
     entries: Dict[str, List[QuantizedLoRA]]
     template: Any                       # lora tree of ShapeDtypeStruct-likes
+    recipe: Optional[QuantRecipe] = None
+
+    @property
+    def signature(self) -> tuple:
+        """Packed-layout signature (``recipe.layout_signature``): adapters
+        sharing it stack into one SGMV bucket / one slot pool."""
+        if self.recipe is not None:
+            return self.recipe.layout_signature
+        # adapters registered pre-quantized without a recipe: derive from
+        # any entry's stored config
+        q = next(q for qs in self.entries.values() for q in qs)
+        return q.config.layout_signature
 
     def total_bits(self) -> int:
         return sum(q.total_bits() for qs in self.entries.values() for q in qs)
@@ -146,7 +162,7 @@ def quantize_adapter_tree(lora_tree, config: LoRAQuantConfig,
             ]
     template = jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                                       lora_tree)
-    return QuantizedAdapter(entries=entries, template=template)
+    return QuantizedAdapter(entries=entries, template=template, recipe=config)
 
 
 def dequantize_adapter(qa: QuantizedAdapter, like_tree) -> Any:
@@ -194,7 +210,17 @@ def _leaf_folds(template) -> Dict[str, int]:
 
 
 class AdapterStore:
-    """Quantized-at-rest adapter registry.
+    """Quantized-at-rest adapter registry with **per-adapter recipes**.
+
+    The store holds only a *default* :class:`~repro.core.QuantRecipe`;
+    every :meth:`register` / :meth:`register_many` call may override it per
+    adapter, so one deployment serves a mixed-precision fleet (premium
+    adapters at 3-4 bits, the long tail near 1 bit — ``docs/recipes.md``).
+    Adapters whose recipes share a packed-layout signature stack into one
+    SGMV bucket; :meth:`pack_batch` over mixed signatures builds
+    :class:`~repro.kernels.PackedLoRABuckets` leaves (one dispatch per
+    bucket per layer), while a uniform set keeps the single-stack fast
+    path.
 
     Serving reads go through one of two forms:
 
@@ -219,10 +245,23 @@ class AdapterStore:
     codes across all layers/paths). ``None`` means unbounded (all-resident).
     """
 
-    def __init__(self, config: LoRAQuantConfig, fp_cache_bytes: int = 1 << 30,
+    def __init__(self, default_recipe: Optional[QuantRecipe] = None,
+                 fp_cache_bytes: int = 1 << 30,
                  batched_quantize: bool = True,
-                 hbm_budget_bytes: Optional[int] = None):
-        self.config = config
+                 hbm_budget_bytes: Optional[int] = None,
+                 *, config: Optional[QuantRecipe] = None):
+        if config is not None:
+            warnings.warn(
+                "AdapterStore(config=...) is deprecated; the store-wide "
+                "config is now only the DEFAULT recipe — pass "
+                "default_recipe=... (and per-adapter recipes to register)",
+                DeprecationWarning, stacklevel=2)
+            if default_recipe is not None:
+                raise TypeError("pass either default_recipe or the "
+                                "deprecated config=, not both")
+            default_recipe = config
+        self.default_recipe = (default_recipe if default_recipe is not None
+                               else QuantRecipe())
         self.quantized: Dict[str, QuantizedAdapter] = {}
         self.fp_cache_bytes = fp_cache_bytes
         self.batched_quantize = batched_quantize
@@ -252,8 +291,33 @@ class AdapterStore:
         all bump it) — a cheap change signal for external caches."""
         return self._mutations
 
-    def register(self, adapter_id: str, lora_tree) -> QuantizedAdapter:
-        qa = quantize_adapter_tree(lora_tree, self.config,
+    @property
+    def config(self) -> QuantRecipe:
+        """Deprecated alias of :attr:`default_recipe` (the store no longer
+        has ONE config — recipes are per adapter)."""
+        return self.default_recipe
+
+    def recipe_of(self, adapter_id: str) -> QuantRecipe:
+        """The recipe an adapter was actually quantized under. Adapters
+        registered pre-quantized without one (``register_quantized``) fall
+        back to their entries' stored config — NOT the store default, which
+        may disagree with the codes actually resident."""
+        qa = self.quantized[adapter_id]
+        if qa.recipe is not None:
+            return qa.recipe
+        return next(q for qs in qa.entries.values() for q in qs).config
+
+    def signature_of(self, adapter_id: str) -> tuple:
+        """Packed-layout signature of one adapter (bucket / slot-pool key)."""
+        return self.quantized[adapter_id].signature
+
+    def register(self, adapter_id: str, lora_tree,
+                 recipe: Optional[QuantRecipe] = None) -> QuantizedAdapter:
+        """Quantize and register one adapter under ``recipe`` (default: the
+        store's :attr:`default_recipe`). Re-registering with a different
+        recipe reconciles every cache tier exactly like a weight update —
+        versions bump, packed layouts and pages rebuild."""
+        qa = quantize_adapter_tree(lora_tree, recipe or self.default_recipe,
                                    batched=self.batched_quantize)
         self._invalidate(adapter_id)
         self.quantized[adapter_id] = qa
@@ -277,36 +341,47 @@ class AdapterStore:
         self._versions.pop(adapter_id, None)
         self._mutations += 1
 
-    def register_many(self, trees: Dict[str, Any]) -> Dict[str, QuantizedAdapter]:
-        """Onboard many uploaded adapters in one bucketed dispatch.
+    def register_many(self, trees: Dict[str, Any],
+                      recipes: Optional[Dict[str, QuantRecipe]] = None,
+                      ) -> Dict[str, QuantizedAdapter]:
+        """Onboard many uploaded adapters in one bucketed dispatch per
+        recipe.
 
-        Every same-shape LoRA linear across ALL trees (layers × paths ×
-        adapters) lands in one ``quantize_lora_stacks`` bucket: for N
-        uploads of one architecture this is one compiled SVD call per
-        distinct leaf shape — not N·paths — which is what bounds onboarding
-        throughput at the many-users tier (ROADMAP: batched onboarding
-        across adapters). Math per adapter is identical to :meth:`register`.
+        Every same-shape LoRA linear across all trees *sharing one recipe*
+        (layers × paths × adapters) lands in one ``quantize_lora_stacks``
+        bucket: for N uploads of one architecture this is one compiled SVD
+        call per distinct (recipe, leaf shape) — not N·paths — which is
+        what bounds onboarding throughput at the many-users tier (ROADMAP:
+        batched onboarding across adapters). ``recipes`` maps adapter ids
+        to per-upload recipe overrides (missing ids use the default). Math
+        per adapter is identical to :meth:`register`.
         """
-        order: List[Tuple[str, str]] = []            # (adapter_id, path)
-        stacks = []
-        for adapter_id, tree in trees.items():
-            for path, leaf in iter_lora_linears(tree):
-                a2, b2 = _leaf_pairs(leaf)
-                order.append((adapter_id, path))
-                stacks.append((b2, a2))
-        results = quantize_lora_stacks(stacks, self.config)
+        recipes = recipes or {}
+        by_recipe: Dict[QuantRecipe, List[str]] = {}
+        for adapter_id in trees:
+            rec = recipes.get(adapter_id, self.default_recipe)
+            by_recipe.setdefault(rec, []).append(adapter_id)
         out: Dict[str, QuantizedAdapter] = {}
-        for (adapter_id, path), qls in zip(order, results):
-            qa = out.get(adapter_id)
-            if qa is None:
-                template = jax.tree_util.tree_map(
-                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                    trees[adapter_id])
-                qa = out[adapter_id] = QuantizedAdapter(entries={},
-                                                        template=template)
-            qa.entries[path] = qls
-        for adapter_id, qa in out.items():
-            self.register_quantized(adapter_id, qa)
+        for rec, adapter_ids in by_recipe.items():
+            order: List[Tuple[str, str]] = []        # (adapter_id, path)
+            stacks = []
+            for adapter_id in adapter_ids:
+                for path, leaf in iter_lora_linears(trees[adapter_id]):
+                    a2, b2 = _leaf_pairs(leaf)
+                    order.append((adapter_id, path))
+                    stacks.append((b2, a2))
+            results = quantize_lora_stacks(stacks, rec)
+            for (adapter_id, path), qls in zip(order, results):
+                qa = out.get(adapter_id)
+                if qa is None:
+                    template = jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        trees[adapter_id])
+                    qa = out[adapter_id] = QuantizedAdapter(
+                        entries={}, template=template, recipe=rec)
+                qa.entries[path] = qls
+        for adapter_id in trees:                     # preserve upload order
+            self.register_quantized(adapter_id, out[adapter_id])
         return out
 
     def _tree_bytes(self, tree) -> int:
@@ -345,9 +420,13 @@ class AdapterStore:
                    tile_t: int = 8, interpret: bool = True) -> Any:
         """Build a lora tree for a heterogeneous batch over ``adapter_ids``:
         every {'a','b'} leaf becomes a :class:`PackedLoRABatch` stack
-        ``(L, NA, Rp, ·)`` in adapter order. The tree mirrors ``like_tree``
-        so the model's layer scan consumes it unchanged; attach per-token
-        segment ids at ``lora["seg"]`` (adapter index per flattened row).
+        ``(L, NA, Rp, ·)`` in adapter order — or, when the adapters'
+        recipes span several packed-layout signatures, a
+        :class:`PackedLoRABuckets` of one stack per signature with lookup
+        tables from the batch-global adapter index to each bucket's local
+        index. The tree mirrors ``like_tree`` so the model's layer scan
+        consumes it unchanged; attach per-token segment ids at
+        ``lora["seg"]`` (batch-global adapter index per flattened row).
 
         The stacked tree is cached per adapter-id tuple (a serving loop
         re-batching the same hot adapter set pays the ``jnp.stack`` cost
@@ -360,6 +439,18 @@ class AdapterStore:
             return cached
         per = [self.packed_entries(a, interpret=interpret)
                for a in adapter_ids]
+        sigs = [self.signature_of(a) for a in adapter_ids]
+        buckets = sorted(set(sigs))
+        na = len(adapter_ids)
+        # per bucket: member positions in batch order + the global→local map
+        members = [[i for i in range(na) if sigs[i] == sig]
+                   for sig in buckets]
+        luts = []
+        for idx in members:
+            lut = np.full((na,), -1, np.int32)
+            lut[np.asarray(idx, np.int32)] = np.arange(len(idx),
+                                                       dtype=np.int32)
+            luts.append(lut)
 
         def rebuild(node, path):
             if isinstance(node, dict):
@@ -372,8 +463,21 @@ class AdapterStore:
                             f"{shape} — serve it with mode='materialize'")
                     # extra lead dims (MoE experts) are folded into the
                     # adapter axis by the packed entries' ``fold`` meta
-                    return stack_packed_adapters([p[path] for p in per],
-                                                 tile_t=tile_t)
+                    if len(buckets) == 1:       # uniform recipes: the exact
+                        return stack_packed_adapters(   # single-stack path
+                            [p[path] for p in per], tile_t=tile_t)
+                    stacks = [stack_packed_adapters([per[i][path]
+                                                     for i in idx],
+                                                    tile_t=tile_t)
+                              for idx in members]
+                    n_layers = stacks[0].ah_codes.shape[0]
+                    return PackedLoRABuckets(
+                        buckets=tuple(stacks),
+                        lookups=tuple(
+                            jnp.broadcast_to(jnp.asarray(lut),
+                                             (n_layers, na))
+                            for lut in luts),
+                        seg=None)
                 return {k: rebuild(v, f"{path}/{k}") for k, v in node.items()}
             if isinstance(node, list):
                 return [rebuild(v, f"{path}/{i}") for i, v in enumerate(node)]
@@ -409,6 +513,7 @@ class AdapterStore:
         params = sum(qa.num_params() for qa in self.quantized.values())
         return {
             "adapters": n,
+            "recipes": len({qa.signature for qa in self.quantized.values()}),
             "avg_bits": bits / max(params, 1),
             "quantized_mb": bits / 8 / 1e6,
             "fp16_equiv_mb": params * 2 / 1e6,
@@ -417,6 +522,15 @@ class AdapterStore:
             "hbm_budget_mb": (self.hbm_budget_bytes / 1e6
                               if self.hbm_budget_bytes is not None
                               else float("inf")),
+        }
+
+    def adapter_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-adapter serving stats: achieved ``avg_bits`` and the recipe
+        name — the fleet view behind the store-wide average."""
+        return {
+            adapter_id: {"avg_bits": qa.avg_bits(),
+                         "recipe": self.recipe_of(adapter_id).variant_name}
+            for adapter_id, qa in self.quantized.items()
         }
 
 
@@ -439,9 +553,11 @@ class _Row:
     start: int                  # left-pad count (first real cache index)
     prompt_len: int
     emitted: List[int]          # generated tokens so far (≥ 1 after prefill)
-    slot: int                   # HBM slot holding this row's adapter page
-                                # (pinned until retirement; doubles as the
-                                # row's SGMV segment id)
+    # NOTE the row does NOT cache its adapter's HBM slot id: the page is
+    # pinned for the row's lifetime, but its GLOBAL id can shift (a pool
+    # growth moves later pools' bases; a re-register with a new recipe
+    # moves the page across pools), so decode re-reads memory.slot_of
+    # every step.
 
 
 class MultiLoRAEngine:
@@ -648,8 +764,7 @@ class MultiLoRAEngine:
         for b, (req, row_idx) in enumerate(zip(reqs, rows)):
             req.t_first = now
             row = _Row(req=req, start=int(starts[b]),
-                       prompt_len=len(req.prompt), emitted=[int(firsts[b])],
-                       slot=int(slots[b]))
+                       prompt_len=len(req.prompt), emitted=[int(firsts[b])])
             self._rows[row_idx] = row
             out.append(row)
         return out
@@ -731,15 +846,17 @@ class MultiLoRAEngine:
             # adapter → pinned slot, one pin per row; shrink the group at
             # the first request whose page cannot get a slot (every slot
             # pinned by live rows) — it waits for a retirement
-            slots: List[int] = []
+            acquired = 0
             for r in group:
-                s = mgr.acquire(r.adapter_id)
-                if s is None:
+                if mgr.acquire(r.adapter_id) is None:
                     break
-                slots.append(s)
-            group = group[: len(slots)]
+                acquired += 1
+            group = group[:acquired]
             if not group:
                 break
+            # global slot ids are read AFTER the whole group's acquires: a
+            # later acquire may grow a pool and shift earlier ids
+            slots = [mgr.slot_of(r.adapter_id) for r in group]
             del self.pending[:len(group)]
             rows = free[:len(group)]
             for row_idx, row in zip(rows,
@@ -761,9 +878,11 @@ class MultiLoRAEngine:
             toks[i, 0] = row.emitted[-1]
             pos[i] = row.start + row.prompt_len + len(row.emitted) - 1
             start[i] = row.start
-            # seg ids ARE slot ids: pinned at admission, so stable across
-            # store mutations and other adapters' evictions/swap-ins
-            seg[i] = row.slot
+            # seg ids ARE (global) slot ids: the page is pinned at
+            # admission, but its global id can shift when an earlier
+            # recipe pool grows — read the current id every step (must
+            # happen BEFORE the prefetch below, which may grow pools)
+            seg[i] = mgr.slot_of(row.req.adapter_id)
         packed = mgr.serving_tree()
         # the tile_t=1 decode view of the slot pool is rebuilt only when the
         # pool changed (serving_tree caches until a swap-in/growth dirties

@@ -1,28 +1,39 @@
-"""Paged adapter memory: HBM slot pool + host tier + prefetch/eviction.
+"""Paged adapter memory: per-recipe HBM slot pools + host tier + prefetch.
 
 Packed serving (``docs/packed_format.md``) made every registered adapter's
 codes device-resident in one ever-growing ``(L, NA, Rp, ·)`` stack. That is
 the right call while the store fits in HBM, but at the "millions of users"
 tier the adapter stack — not the base model — becomes the HBM bottleneck.
-This module bounds it: a fixed number of HBM **slots** hold the *hot set*
+This module bounds it: a budgeted set of HBM **slots** holds the *hot set*
 of adapters, every registered adapter's packed codes live in a host-RAM
 tier as numpy, and the continuous scheduler faults the long tail in on
 demand (see ``docs/adapter_memory.md``).
 
+With **per-adapter quantization recipes** (``docs/recipes.md``) pages are
+no longer one size: a 4-bit premium adapter's page is ~2× a 2-bit one.
+Slots therefore live in one pool **per packed-layout signature**
+(``recipe.layout_signature``): inside a pool every page is a fixed-size
+slice of that pool's persistent stacks, and a swap-in stays ONE
+``dynamic_update_slice`` dispatch. Budget accounting uses each signature's
+*real* ``page_bytes``; pools under a byte budget grow slot-by-slot against
+a shared ledger and reclaim from each other's cold tails when it runs dry.
+
 Key facts that make paging cheap:
 
-* **Uniform pages.** Zero-scale rank padding already gives every adapter of
-  one store identical per-path leaf shapes ``(L, [fold,] Rp, ·)``, so a
-  "page" is a fixed-size slice of the persistent slot stack and a swap-in
-  is one ``dynamic_update_slice`` per leaf array — no reallocation, no
-  recompilation (the decode program's shapes are a function of the slot
-  count, not of how many adapters exist).
-* **Slot ids are segment ids.** The SGMV kernels index an arbitrary adapter
-  axis via per-row segment ids; pointing a row's seg id at a *slot* instead
-  of a store-wide index leaves the kernels untouched.
+* **Uniform pages per pool.** Zero-scale rank padding gives every adapter
+  of one signature identical per-path leaf shapes ``(L, [fold,] Rp, ·)``,
+  so a "page" is a fixed-size slice of its pool's slot stacks — no
+  reallocation, no recompilation on a fault (the decode program's shapes
+  are a function of the pool capacities, not of how many adapters exist).
+* **Slot ids are segment ids.** The SGMV kernels index an arbitrary
+  adapter axis via per-row segment ids. A row's seg id is the **global**
+  slot id — the pool's base offset (pools concatenate in creation order)
+  plus the local slot; with several pools the serving tree is a
+  :class:`~repro.kernels.PackedLoRABuckets` whose per-pool lookups map
+  global ids back to pool-local ones, so the kernels stay untouched.
 * **Pinning.** A slot referenced by a live batch row is pinned (refcounted)
   and never evicted, so mid-decode rows keep reading stable codes while the
-  unpinned remainder of the pool churns LRU.
+  unpinned remainder of the pools churns LRU.
 * **Prefetch.** The engine issues swap-ins for the next admission wave
   *before* dispatching the current decode step; the copies have no data
   dependency on the in-flight step (functional update → fresh buffers), so
@@ -41,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import PackedLoRABatch, pack_adapter_layers
+from repro.kernels import PackedLoRABatch, PackedLoRABuckets, pack_adapter_layers
 from repro.kernels.quant_matmul.ops import (
     _PACKED_ARRAY_FIELDS as _ARRAY_FIELDS,
 )
@@ -56,15 +67,15 @@ _META_FIELDS = tuple(
 
 @jax.jit
 def _page_write(pool, page, starts):
-    """Write one adapter's whole page into the persistent slot stacks at
-    the (per-path, fold-scaled) columns in ``starts`` — the
+    """Write one adapter's whole page into a pool's persistent slot stacks
+    at the (per-path, fold-scaled) columns in ``starts`` — the
     ``pool.at[slot].set`` of the design, batched over every leaf array so a
     swap-in is ONE dispatch, not #paths·#fields dispatches. The slot column
     is a traced operand: faulting into slot 0 and slot 7 share the
-    executable, and the pool shapes never change, so there is exactly one
-    compile per pool geometry. The update is functional (old buffers stay
-    valid for any already-dispatched decode step, which is what lets
-    prefetch overlap compute); on a real TPU deployment add
+    executable, and a pool's shapes only change on growth, so there is
+    exactly one compile per pool geometry. The update is functional (old
+    buffers stay valid for any already-dispatched decode step, which is
+    what lets prefetch overlap compute); on a real TPU deployment add
     ``donate_argnums=(0,)`` + drop the cached tree to alias in place —
     donation is a no-op warning on the CPU backend this container uses."""
     return jax.tree_util.tree_map(
@@ -77,27 +88,52 @@ def _page_write(pool, page, starts):
 class _HostPage:
     """One adapter's packed codes in the host tier: per path, per packed
     field, a numpy array ``(L, fold, Rp, ·)`` (fold == 1 for plain leaves).
-    ``version`` is the AdapterStore epoch the page was built from."""
+    ``version`` is the AdapterStore epoch the page was built from and
+    ``sig`` the recipe's packed-layout signature (its pool key)."""
 
     arrays: Dict[str, Dict[str, np.ndarray]]
     version: int
     nbytes: int
+    sig: tuple
+
+
+@dataclasses.dataclass
+class _Pool:
+    """One signature's HBM slot pool: persistent per-path stacks
+    ``(L, capacity·fold, Rp, ·)`` plus the local slot-owner table."""
+
+    sig: tuple
+    arrays: Optional[Dict[str, Dict[str, jax.Array]]]   # None until cap > 0
+    capacity: int
+    owners: List[Optional[str]]
+    page_bytes: int
+
+    def nbytes(self) -> int:
+        if self.arrays is None:
+            return 0
+        return sum(arr.size * arr.dtype.itemsize
+                   for fields in self.arrays.values()
+                   for arr in fields.values())
 
 
 class AdapterMemoryManager:
     """Two-tier adapter memory for the continuous scheduler.
 
-    * **HBM tier**: ``num_slots`` fixed pages inside persistent per-path
-      stacks ``(L, num_slots·fold, Rp, ·)`` — the arrays the decode program
-      reads through :class:`~repro.kernels.PackedLoRABatch` leaves.
+    * **HBM tier**: one :class:`_Pool` per recipe layout signature; global
+      slot ids concatenate the pools in creation order (pool base + local
+      slot) and ARE the decode seg ids.
     * **Host tier**: every registered adapter's packed codes as numpy
       (:class:`_HostPage`), built lazily per adapter and rebuilt when the
-      store re-registers an id.
+      store re-registers an id (weights *or* recipe).
 
-    Slot count resolution order: explicit ``num_slots`` →
-    ``store.hbm_budget_bytes // page_bytes`` → growable (starts at the
-    registered-adapter count and doubles on demand — the all-resident
-    behavior of the pre-paging engine, now expressed as "budget = ∞").
+    Capacity resolution: explicit ``num_slots`` bounds the TOTAL slot count
+    across pools; ``store.hbm_budget_bytes`` bounds the total pool bytes
+    using each signature's real ``page_bytes``; neither → growable
+    (all-resident "budget = ∞"). A store whose adapters share one
+    signature pre-allocates its single pool up front (the classic
+    uniform-page behavior: ``budget // page_bytes`` slots); mixed-recipe
+    stores grow pools slot-by-slot against the shared ledger and reclaim
+    cold slots from other pools' tails when it runs dry.
 
     Eviction is LRU over resident, unpinned, unreserved slots. ``pin`` /
     ``unpin`` are refcounted per adapter id (one count per live batch row);
@@ -117,15 +153,13 @@ class AdapterMemoryManager:
         self.interpret = interpret
 
         self._leaf_info: Optional[List[Tuple[str, int, int]]] = None
-        self._meta: Dict[str, Dict[str, Any]] = {}
         self._host: Dict[str, _HostPage] = {}
-        self._pool: Optional[Dict[str, Dict[str, jax.Array]]] = None
-        self._capacity = 0
-        self._growable = False
-        self._page_bytes: Optional[int] = None
+        self._pools: "collections.OrderedDict[tuple, _Pool]" = (
+            collections.OrderedDict())
+        self._page_bytes_by_sig: Dict[tuple, int] = {}
+        self._meta_by_sig: Dict[tuple, Dict[str, Dict[str, Any]]] = {}
 
-        self._slot_owner: List[Optional[str]] = []
-        self._slot_of: Dict[str, int] = {}
+        self._where: Dict[str, Tuple[tuple, int]] = {}   # aid -> (sig, local)
         self._slot_version: Dict[str, int] = {}
         self._pins: Dict[str, int] = {}
         self._reserved: Set[str] = set()
@@ -159,9 +193,12 @@ class AdapterMemoryManager:
             self._leaf_info = info
         return self._leaf_info
 
+    def _sig_of(self, adapter_id: str) -> tuple:
+        return self.store.signature_of(adapter_id)
+
     def _host_page(self, adapter_id: str) -> _HostPage:
         """Host-tier page for one adapter, (re)built from the store's
-        quantized entries when absent or stale."""
+        quantized entries when absent or stale (weight OR recipe change)."""
         version = self.store.version(adapter_id)
         if version is None:
             raise KeyError(f"adapter {adapter_id!r} is not registered")
@@ -169,13 +206,14 @@ class AdapterMemoryManager:
         if page is not None and page.version == version:
             return page
         qa = self.store.quantized[adapter_id]
+        sig = self._sig_of(adapter_id)
         arrays: Dict[str, Dict[str, np.ndarray]] = {}
+        meta: Dict[str, Dict[str, Any]] = {}
         nbytes = 0
         for path, n_layers, fold in self._leaves():
             pb = pack_adapter_layers(qa.entries[path], interpret=self.interpret,
                                      fold=fold)
-            if path not in self._meta:
-                self._meta[path] = {f: getattr(pb, f) for f in _META_FIELDS}
+            meta[path] = {f: getattr(pb, f) for f in _META_FIELDS}
             fields = {}
             for f in _ARRAY_FIELDS:
                 arr = np.asarray(getattr(pb, f))
@@ -183,75 +221,200 @@ class AdapterMemoryManager:
                 fields[f] = arr.reshape((n_layers, fold) + arr.shape[-2:])
                 nbytes += fields[f].nbytes
             arrays[path] = fields
-        page = _HostPage(arrays=arrays, version=version, nbytes=nbytes)
+        page = _HostPage(arrays=arrays, version=version, nbytes=nbytes,
+                         sig=sig)
         self._host[adapter_id] = page
-        if self._page_bytes is None:
-            self._page_bytes = nbytes
+        self._page_bytes_by_sig.setdefault(sig, nbytes)
+        self._meta_by_sig.setdefault(sig, meta)
         return page
+
+    def page_bytes_of(self, adapter_id: str) -> int:
+        """HBM bytes one slot of this adapter's signature pool occupies."""
+        sig = self._sig_of(adapter_id)
+        if sig not in self._page_bytes_by_sig:
+            self._host_page(adapter_id)
+        return self._page_bytes_by_sig[sig]
+
+    def _sig_page_bytes(self, sig: tuple) -> int:
+        """Page bytes for a signature, probing any registered adapter of
+        that signature if not yet known."""
+        if sig not in self._page_bytes_by_sig:
+            for aid in self.store.quantized:
+                if self._sig_of(aid) == sig:
+                    self._host_page(aid)
+                    break
+        if sig not in self._page_bytes_by_sig:
+            raise RuntimeError(f"no adapter of signature {sig} registered: "
+                               "page size unknown")
+        return self._page_bytes_by_sig[sig]
 
     @property
     def page_bytes(self) -> int:
-        """HBM bytes one adapter slot occupies (uniform across adapters)."""
-        if self._page_bytes is None:
-            if not self.store.quantized:
-                raise RuntimeError("no adapter registered yet: page size "
-                                   "unknown")
-            self._host_page(next(iter(self.store.quantized)))
-        return self._page_bytes
+        """HBM bytes one adapter slot occupies — only well-defined while
+        every registered adapter shares one recipe signature; use
+        :meth:`page_bytes_of` for mixed-recipe stores."""
+        sigs = self._registered_sigs()
+        if not sigs:
+            raise RuntimeError("no adapter registered yet: page size "
+                               "unknown")
+        if len(sigs) > 1:
+            raise RuntimeError("mixed recipe signatures: page size is "
+                               "per-adapter (use page_bytes_of)")
+        return self._sig_page_bytes(next(iter(sigs)))
 
-    def _resolve_capacity(self) -> int:
+    def _registered_sigs(self) -> Set[tuple]:
+        return {qa.signature for qa in self.store.quantized.values()}
+
+    # ----- ledger -----
+
+    @property
+    def _growable(self) -> bool:
+        return (self.requested_slots is None
+                and getattr(self.store, "hbm_budget_bytes", None) is None)
+
+    def _cost(self, sig: tuple) -> int:
+        """Ledger cost of one slot of ``sig``: a slot under ``num_slots``,
+        its real page bytes under ``hbm_budget_bytes``."""
+        if self.requested_slots is not None:
+            return 1
+        return self._sig_page_bytes(sig)
+
+    def _limit(self) -> Optional[int]:
         if self.requested_slots is not None:
             return self.requested_slots
         budget = getattr(self.store, "hbm_budget_bytes", None)
-        if budget is not None:
-            return max(1, int(budget) // max(self.page_bytes, 1))
-        self._growable = True
-        return max(1, len(self.store.quantized))
+        return None if budget is None else int(budget)
 
-    def _alloc_pool(self, capacity: int):
-        """(Re)allocate the slot stacks at ``capacity`` slots, preserving
-        resident pages (growth path keeps slot ids stable)."""
-        old, old_cap = self._pool, self._capacity
-        pool: Dict[str, Dict[str, jax.Array]] = {}
+    def _used(self) -> int:
+        if self.requested_slots is not None:
+            return sum(p.capacity for p in self._pools.values())
+        return sum(p.capacity * self._sig_page_bytes(p.sig)
+                   for p in self._pools.values())
+
+    def _headroom(self, sig: tuple, n: int = 1) -> bool:
+        limit = self._limit()
+        if limit is None:
+            return True
+        if self._used() == 0:
+            return True            # progress guarantee: a first slot always
+        return self._used() + n * self._cost(sig) <= limit
+
+    # ----- pools -----
+
+    def _pool(self, sig: tuple) -> _Pool:
+        pool = self._pools.get(sig)
+        if pool is not None:
+            return pool
+        page_bytes = self._sig_page_bytes(sig)
+        pool = _Pool(sig=sig, arrays=None, capacity=0, owners=[],
+                     page_bytes=page_bytes)
+        self._pools[sig] = pool
+        # classic uniform-page behavior: the first pool of a store whose
+        # adapters all share one signature is pre-allocated to the full
+        # allowance (num_slots, or max(1, budget // page_bytes)); growable
+        # pools start at the current registry size of their signature
+        sigs = self._registered_sigs()
+        if self._growable:
+            n = max(1, sum(1 for aid in self.store.quantized
+                           if self._sig_of(aid) == sig))
+            self._resize_pool(pool, n)
+        elif len(self._pools) == 1 and sigs == {sig}:
+            if self.requested_slots is not None:
+                self._resize_pool(pool, self.requested_slots)
+            else:
+                budget = int(self.store.hbm_budget_bytes)
+                self._resize_pool(pool, max(1, budget // max(page_bytes, 1)))
+        return pool
+
+    def _resize_pool(self, pool: _Pool, capacity: int):
+        """(Re)allocate a pool's slot stacks at ``capacity`` slots,
+        preserving resident pages (growth keeps local slot ids stable;
+        shrink drops only freed tail slots)."""
+        if capacity == pool.capacity:
+            return
+        if capacity == 0:
+            pool.arrays = None
+            pool.capacity = 0
+            pool.owners = []
+            self._tree = None
+            return
+        ref_page = None
+        for aid, hp in self._host.items():
+            if hp.sig == pool.sig:
+                ref_page = hp
+                break
+        assert ref_page is not None, "pool resize before any host page"
+        old, old_cap = pool.arrays, pool.capacity
+        arrays: Dict[str, Dict[str, jax.Array]] = {}
         for path, n_layers, fold in self._leaves():
-            ref = self._host[next(iter(self._host))].arrays[path]
+            ref = ref_page.arrays[path]
             fields = {}
             for f in _ARRAY_FIELDS:
                 shape = ((n_layers, capacity * fold) + ref[f].shape[-2:])
                 z = jnp.zeros(shape, ref[f].dtype)
                 if old is not None and old_cap:
-                    z = z.at[:, : old_cap * fold].set(old[path][f])
+                    keep = min(old_cap, capacity) * fold
+                    z = z.at[:, :keep].set(old[path][f][:, :keep])
                 fields[f] = z
-            pool[path] = fields
-        self._pool = pool
-        self._capacity = capacity
-        self._slot_owner.extend([None] * (capacity - len(self._slot_owner)))
+            arrays[path] = fields
+        pool.arrays = arrays
+        pool.capacity = capacity
+        if capacity > len(pool.owners):
+            pool.owners.extend([None] * (capacity - len(pool.owners)))
+        else:
+            assert all(o is None for o in pool.owners[capacity:])
+            del pool.owners[capacity:]
         self._tree = None
 
-    def _ensure_pool(self, adapter_id: Optional[str] = None):
-        if self._pool is not None:
-            return
-        if adapter_id is not None:
-            self._host_page(adapter_id)     # learn page shapes/bytes first
-        else:
-            _ = self.page_bytes
-        self._alloc_pool(self._resolve_capacity())
+    def _base(self, sig: tuple) -> int:
+        """Global slot id of the pool's local slot 0 (pools concatenate in
+        creation order)."""
+        base = 0
+        for s, pool in self._pools.items():
+            if s == sig:
+                return base
+            base += pool.capacity
+        raise KeyError(sig)
 
     # ----- slot accounting -----
 
     @property
     def num_slots(self) -> int:
-        self._ensure_pool()
-        return self._capacity
+        """Total slot capacity across pools (ensures the default pool for a
+        store that has registered adapters but no pool yet)."""
+        self._ensure_default_pool()
+        return sum(p.capacity for p in self._pools.values())
+
+    def _ensure_default_pool(self):
+        if self._pools or not self.store.quantized:
+            if not self._pools and not self.store.quantized:
+                raise RuntimeError("no adapter registered yet: page size "
+                                   "unknown")
+            return
+        self._pool(self._sig_of(next(iter(self.store.quantized))))
+
+    @property
+    def _slot_owner(self) -> List[Optional[str]]:
+        """Global owner table (concatenated pools, base order) — the
+        slot-id view the engine's seg ids live in."""
+        out: List[Optional[str]] = []
+        for pool in self._pools.values():
+            out.extend(pool.owners)
+        return out
 
     def resident(self, adapter_id: str) -> bool:
-        """True when the adapter's *current* codes occupy a slot."""
-        return (adapter_id in self._slot_of
-                and self._slot_version.get(adapter_id)
-                == self.store.version(adapter_id))
+        """True when the adapter's *current* codes occupy a slot (weight
+        version AND recipe signature both current)."""
+        loc = self._where.get(adapter_id)
+        if loc is None:
+            return False
+        return (self._slot_version.get(adapter_id)
+                == self.store.version(adapter_id)
+                and loc[0] == self._sig_of(adapter_id))
 
     def slot_of(self, adapter_id: str) -> int:
-        return self._slot_of[adapter_id]
+        sig, local = self._where[adapter_id]
+        return self._base(sig) + local
 
     def pin(self, adapter_id: str):
         self._pins[adapter_id] = self._pins.get(adapter_id, 0) + 1
@@ -267,77 +430,159 @@ class AdapterMemoryManager:
         return self._pins.get(adapter_id, 0) > 0
 
     def _free_slot(self, adapter_id: str):
-        slot = self._slot_of.pop(adapter_id)
-        self._slot_owner[slot] = None
+        sig, local = self._where.pop(adapter_id)
+        self._pools[sig].owners[local] = None
         self._slot_version.pop(adapter_id, None)
         self._lru.pop(adapter_id, None)
         self._reserved.discard(adapter_id)
 
-    def _find_slot(self) -> Optional[int]:
-        """A free slot, else the LRU unpinned/unreserved victim's slot, else
-        grow (unbounded mode only), else None."""
-        for slot, owner in enumerate(self._slot_owner):
+    def _evictable(self, adapter_id: str) -> bool:
+        return (not self.pinned(adapter_id)
+                and adapter_id not in self._reserved)
+
+    def _find_slot(self, sig: tuple) -> Optional[int]:
+        """A local slot in ``sig``'s pool: free slot, else same-pool LRU
+        victim, else growth within the ledger (reclaiming other pools'
+        cold tail slots if the ledger is dry), else None."""
+        pool = self._pool(sig)
+        for slot, owner in enumerate(pool.owners):
             if owner is None:
                 return slot
         for aid in self._lru:              # least-recent first
-            if not self.pinned(aid) and aid not in self._reserved:
-                slot = self._slot_of[aid]
-                self._free_slot(aid)
-                self.evictions += 1
-                return slot
+            loc = self._where.get(aid)
+            if loc is None or loc[0] != sig or not self._evictable(aid):
+                continue
+            slot = loc[1]
+            self._free_slot(aid)
+            self.evictions += 1
+            return slot
         if self._growable:
-            slot = self._capacity
-            self._alloc_pool(max(2 * self._capacity, 1))
+            slot = pool.capacity
+            self._resize_pool(pool, max(2 * pool.capacity, 1))
+            return slot
+        if not self._headroom(sig):
+            self._reclaim(sig)
+        if self._headroom(sig):
+            # geometric growth clamped to the ledger headroom: each realloc
+            # copies the whole pool and retraces _page_write, so doubling
+            # amortizes what +1-per-fault would make O(N^2)
+            room = (self._limit() - self._used()) // self._cost(sig)
+            slot = pool.capacity
+            self._resize_pool(pool, min(max(2 * pool.capacity, 1),
+                                        pool.capacity + max(int(room), 1)))
             return slot
         return None
 
-    def _swap_in(self, adapter_id: str, slot: int):
-        """Issue the host→HBM copy of one page into ``slot`` as ONE jitted
-        dispatch over every leaf array. Functional update: the previous
-        pool buffers stay valid for any already-dispatched step, the
-        next-built tree reads the new ones."""
+    def _reclaim(self, need_sig: tuple):
+        """Free ledger room for one ``need_sig`` slot by evicting cold
+        pages in OTHER pools and shrinking those pools' tails (a freed
+        middle slot is filled by migrating the tail's unpinned owner — a
+        host-tier swap-in — so the tail can drop). Stops as soon as the
+        ledger has headroom; pinned/reserved tails bound what's
+        reclaimable."""
+        for aid in list(self._lru):
+            if self._headroom(need_sig):
+                return
+            loc = self._where.get(aid)
+            if loc is None or loc[0] == need_sig or not self._evictable(aid):
+                continue
+            sig = loc[0]
+            self._free_slot(aid)
+            self.evictions += 1
+            self._shrink_tail(self._pools[sig])
+        # final pass: tails freed by earlier evictions in any order
+        for pool in self._pools.values():
+            if self._headroom(need_sig):
+                return
+            if pool.sig != need_sig:
+                self._shrink_tail(pool)
+
+    def _shrink_tail(self, pool: _Pool):
+        """Drop the pool's trailing free slots (releasing their ledger
+        cost). If the tail is held by an unpinned, unreserved owner while
+        free slots sit below it, migrate that owner down (one host-tier
+        swap-in) first. Migrations run on the owner table first; the
+        arrays realloc ONCE at the final capacity."""
+        cap = pool.capacity
+        migrated = []
+        while cap:
+            owner = pool.owners[cap - 1]
+            if owner is None:
+                cap -= 1
+                continue
+            hole = next((i for i, o in enumerate(pool.owners[:cap - 1])
+                         if o is None), None)
+            if hole is None or not self._evictable(owner):
+                break
+            pool.owners[cap - 1] = None
+            pool.owners[hole] = owner
+            self._where[owner] = (pool.sig, hole)
+            migrated.append((owner, hole))
+            cap -= 1
+        for owner, hole in migrated:       # data follows the owner table
+            self._swap_in(owner, pool.sig, hole, migrate=True)
+        if cap != pool.capacity:
+            self._resize_pool(pool, cap)
+
+    def _swap_in(self, adapter_id: str, sig: tuple, slot: int,
+                 migrate: bool = False):
+        """Issue the host→HBM copy of one page into ``sig``'s pool at local
+        ``slot`` as ONE jitted dispatch over every leaf array. Functional
+        update: the previous pool buffers stay valid for any
+        already-dispatched step, the next-built tree reads the new ones."""
         page = self._host_page(adapter_id)
+        pool = self._pools[sig]
         starts = {path: {f: jnp.int32(slot * fold) for f in _ARRAY_FIELDS}
                   for path, _, fold in self._leaves()}
-        self._pool = _page_write(self._pool, page.arrays, starts)
-        self._slot_owner[slot] = adapter_id
-        self._slot_of[adapter_id] = slot
+        pool.arrays = _page_write(pool.arrays, page.arrays, starts)
+        pool.owners[slot] = adapter_id
+        self._where[adapter_id] = (sig, slot)
         self._slot_version[adapter_id] = page.version
-        self._lru[adapter_id] = None
-        self._lru.move_to_end(adapter_id)
+        if not migrate:
+            self._lru[adapter_id] = None
+            self._lru.move_to_end(adapter_id)
         self.swap_ins += 1
         self._tree = None
 
     # ----- engine-facing operations -----
 
     def acquire(self, adapter_id: str, pin: bool = True) -> Optional[int]:
-        """Map an adapter to a resident slot for admission.
+        """Map an adapter to a resident slot for admission; returns the
+        GLOBAL slot id (pool base + local — the decode seg id).
 
         Hit: touch LRU, pin, return the slot. Miss: claim a free/evictable
-        slot, issue the swap-in (the admission that follows is queued behind
-        it by dispatch order), pin, return the slot. Returns ``None`` when
-        every slot is pinned or reserved — the caller leaves the request
-        pending and retries next step.
+        slot in the adapter's signature pool, issue the swap-in (the
+        admission that follows is queued behind it by dispatch order), pin,
+        return the slot. Returns ``None`` when no slot can be claimed
+        (everything pinned/reserved and the ledger is dry) — the caller
+        leaves the request pending and retries next step.
+
+        Note the returned global id is only stable until another pool
+        grows; the engine re-reads :meth:`slot_of` when building each
+        step's seg ids.
         """
-        self._ensure_pool(adapter_id)
+        sig = self._sig_of(adapter_id)
         if self.resident(adapter_id):
             self.hits += 1
-            slot = self._slot_of[adapter_id]
+            local = self._where[adapter_id][1]
         else:
-            if adapter_id in self._slot_of:        # resident but stale codes
-                slot = self._slot_of[adapter_id]   # reload in place
-            else:
-                slot = self._find_slot()
-                if slot is None:
-                    return None                    # retried next step — not
-            self.misses += 1                       # charged as a miss
-            self._swap_in(adapter_id, slot)
+            loc = self._where.get(adapter_id)
+            if loc is not None and loc[0] == sig:
+                local = loc[1]                 # resident but stale codes:
+            else:                              # reload in place
+                if loc is not None:            # recipe changed pools
+                    self._free_slot(adapter_id)
+                local = self._find_slot(sig)
+                if local is None:
+                    return None                # retried next step — not
+            self.misses += 1                   # charged as a miss
+            self._swap_in(adapter_id, sig, local)
         self._lru[adapter_id] = None
         self._lru.move_to_end(adapter_id)
         self._reserved.discard(adapter_id)
         if pin:
             self.pin(adapter_id)
-        return slot
+        return self._base(sig) + local
 
     def prefetch(self, adapter_ids: Sequence[str]):
         """Stage the next admission wave's pages one step ahead.
@@ -353,44 +598,64 @@ class AdapterMemoryManager:
         for aid in adapter_ids:
             if self.store.version(aid) is None:
                 continue
-            self._ensure_pool(aid)
+            sig = self._sig_of(aid)
             if not self.resident(aid):
-                if aid in self._slot_of:
-                    slot = self._slot_of[aid]
+                loc = self._where.get(aid)
+                if loc is not None and loc[0] == sig:
+                    slot = loc[1]
                 else:
+                    if loc is not None:
+                        self._free_slot(aid)
                     self._reserved = reserved      # protect earlier stages
-                    slot = self._find_slot()
+                    slot = self._find_slot(sig)
                     if slot is None:
                         continue
-                self._swap_in(aid, slot)
+                self._swap_in(aid, sig, slot)
             self._lru[aid] = None
             self._lru.move_to_end(aid)
             reserved.add(aid)
         self._reserved = reserved
 
     def refresh(self):
-        """Reconcile with store mutations (register / re-register /
-        unregister) since the last call. Unregistered adapters lose their
-        host page immediately and their slot once unpinned (a live row keeps
-        serving the codes already in its pinned slot until it retires);
-        re-registered pinned adapters are reloaded in place so active rows
-        serve the newest weights, matching the pack-cache invalidation
-        semantics of the all-resident path."""
+        """Reconcile with store mutations (register / re-register with new
+        weights OR a new recipe / unregister) since the last call.
+        Unregistered adapters lose their host page immediately and their
+        slot once unpinned (a live row keeps serving the codes already in
+        its pinned slot until it retires); re-registered pinned adapters
+        are reloaded — in place when the recipe signature is unchanged,
+        into their new signature's pool otherwise — so active rows serve
+        the newest weights, matching the pack-cache invalidation semantics
+        of the all-resident path."""
         mutations = self.store.mutation_count()
         if mutations == self._seen_mutations:
             return
         self._seen_mutations = mutations
-        for aid in list(self._slot_of):
+        for aid in list(self._where):
             version = self.store.version(aid)
             if version is None:
                 self._host.pop(aid, None)
                 if not self.pinned(aid):
                     self._free_slot(aid)
             elif version != self._slot_version.get(aid):
-                if self.pinned(aid):
-                    self._swap_in(aid, self._slot_of[aid])
-                else:
+                sig_now = self._sig_of(aid)
+                sig_was = self._where[aid][0]
+                if not self.pinned(aid):
                     self._free_slot(aid)
+                elif sig_now == sig_was:
+                    self._swap_in(aid, sig_was, self._where[aid][1])
+                else:
+                    # pinned page whose recipe moved pools: claim a slot in
+                    # the new pool, then release the old one
+                    local = self._find_slot(sig_now)
+                    old_sig, old_local = self._where[aid]
+                    if local is None:
+                        raise RuntimeError(
+                            f"adapter {aid!r} re-registered with a new "
+                            f"recipe while pinned, but its new pool has no "
+                            f"free slot")
+                    self._pools[old_sig].owners[old_local] = None
+                    self._where[aid] = (sig_now, local)
+                    self._swap_in(aid, sig_now, local)
         for aid in list(self._host):
             if self.store.version(aid) is None:
                 self._host.pop(aid, None)
@@ -399,22 +664,47 @@ class AdapterMemoryManager:
 
     def serving_tree(self):
         """The lora tree the engine feeds the model: ``like_tree`` mirrored
-        with :class:`PackedLoRABatch` leaves over the slot stacks. Rebuilt
-        only after a swap-in/growth changed the pool (cheap dataclass
+        with :class:`PackedLoRABatch` leaves over the slot stacks (one
+        pool) or :class:`PackedLoRABuckets` leaves (one bucket per pool,
+        lookups from global slot ids to pool-local ones). Rebuilt only
+        after a swap-in / growth changed a pool (cheap dataclass
         construction; array buffers are shared, so an unchanged tree keeps
         its identity and the engine's retile cache stays warm)."""
-        self._ensure_pool()
+        self._ensure_default_pool()
         if self._tree is not None:
             return self._tree
+
+        live = [p for p in self._pools.values() if p.capacity > 0]
+        total = sum(p.capacity for p in self._pools.values())
+        luts = []
+        for pool in live:
+            lut = np.full((total,), -1, np.int32)
+            base = self._base(pool.sig)
+            lut[base:base + pool.capacity] = np.arange(pool.capacity,
+                                                       dtype=np.int32)
+            luts.append(jnp.asarray(lut))
+
+        def leaf_of(pool: _Pool, path: str, n_layers: int):
+            fields = dict(pool.arrays[path])
+            meta = self._meta_by_sig[pool.sig][path]
+            return PackedLoRABatch(**fields, seg=None, **meta,
+                                   tile_t=self.tile_t,
+                                   interpret=self.interpret)
 
         def rebuild(node, path):
             if isinstance(node, dict):
                 if set(node.keys()) == {"a", "b"}:
-                    fields = dict(self._pool[path])
-                    meta = self._meta[path]
-                    return PackedLoRABatch(
-                        **fields, seg=None, **meta,
-                        tile_t=self.tile_t, interpret=self.interpret)
+                    n_layers = next(L for p, L, _ in self._leaves()
+                                    if p == path)
+                    if len(live) == 1 and total == live[0].capacity:
+                        return leaf_of(live[0], path, n_layers)
+                    return PackedLoRABuckets(
+                        buckets=tuple(leaf_of(p, path, n_layers)
+                                      for p in live),
+                        lookups=tuple(
+                            jnp.broadcast_to(lut, (n_layers, total))
+                            for lut in luts),
+                        seg=None)
                 return {k: rebuild(v, f"{path}/{k}") for k, v in node.items()}
             if isinstance(node, list):
                 return [rebuild(v, f"{path}/{i}") for i, v in enumerate(node)]
@@ -429,13 +719,10 @@ class AdapterMemoryManager:
     # ----- accounting -----
 
     def hbm_bytes(self) -> int:
-        """Bytes of the HBM slot pool — a function of the slot count, not of
-        how many adapters are registered."""
-        if self._pool is None:
-            return 0
-        return sum(arr.size * arr.dtype.itemsize
-                   for fields in self._pool.values()
-                   for arr in fields.values())
+        """Bytes of the HBM slot pools — a function of the slot capacities
+        (each priced at its signature's real page bytes), not of how many
+        adapters are registered."""
+        return sum(p.nbytes() for p in self._pools.values())
 
     def host_bytes(self) -> int:
         return sum(p.nbytes for p in self._host.values())
@@ -443,8 +730,9 @@ class AdapterMemoryManager:
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
         return {
-            "slots": self._capacity,
-            "resident": len(self._slot_of),
+            "slots": sum(p.capacity for p in self._pools.values()),
+            "pools": len(self._pools),
+            "resident": len(self._where),
             "pinned": len(self._pins),
             "hits": self.hits,
             "misses": self.misses,

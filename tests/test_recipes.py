@@ -1,0 +1,375 @@
+"""Per-adapter quantization recipes (docs/recipes.md): budget fitting,
+mixed-precision fleets served in one batch, bucketed SGMV dispatch, the
+per-signature paged-memory pools, and the deprecation shim for the old
+store-wide-config API."""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import decaying_lora, smoke_cfg
+from repro.core import LoRAQuantConfig, QuantRecipe, fit_recipe, quantize_lora
+from repro.kernels import PackedLoRABatch, PackedLoRABuckets
+from repro.kernels.quant_matmul.kernel import (
+    LAUNCH_COUNTS,
+    reset_launch_counts,
+)
+from repro.launch.serve import random_trained_lora
+from repro.models import build_model
+from repro.models.common import linear
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+
+# the acceptance's mixed fleet: three distinct bits_high plus one
+# binary-dominated adapter (rho → 0 puts all but one singular pair in the
+# 1-bit sub-LoRA; every layer keeps a low side, i.e. no h == r layer)
+RECIPES = {
+    "u0": LoRAQuantConfig(rho=0.95, bits_high=4, ste_steps=0),
+    "u1": LoRAQuantConfig(rho=0.9, bits_high=3, ste_steps=0),
+    "u2": LoRAQuantConfig(rho=0.9, bits_high=2, ste_steps=0),
+    "u3": LoRAQuantConfig(rho=1e-6, bits_high=2, ste_steps=0),
+}
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = smoke_cfg("llama3.2-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mixed_store(tiny_model):
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(ste_steps=0))
+    trees = {k: random_trained_lora(params["lora"],
+                                    jax.random.PRNGKey(20 + i), scale=0.05)
+             for i, k in enumerate(RECIPES)}
+    store.register_many(trees, recipes=RECIPES)
+    return store
+
+
+def _reqs(cfg, seq, seed=30, max_new=4, plen=8):
+    return [Request(request_id=i, adapter_id=a,
+                    prompt=np.random.default_rng(seed + i).integers(
+                        0, cfg.vocab, size=plen).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, a in enumerate(seq)]
+
+
+# --------------------------------------------------------------------------
+# budget fitting
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target", [1.0, 1.5, 2.0, 3.0])
+def test_fit_recipe_lands_within_quarter_bit(target):
+    """Acceptance: fit_recipe within 0.25 bits of the target for b ∈
+    {1.0, 1.5, 2.0, 3.0} on the test adapters — verified against the
+    *achieved* AvgBits after real quantization, not just the prediction."""
+    pairs = [decaying_lora(seed=s) for s in range(3)]
+    rec = fit_recipe(pairs, target, base=LoRAQuantConfig(ste_steps=0))
+    qs = [quantize_lora(jnp.asarray(b), jnp.asarray(a), rec)
+          for b, a in pairs]
+    achieved = (sum(q.total_bits() for q in qs)
+                / sum(q.num_params() for q in qs))
+    assert abs(achieved - target) <= 0.25
+
+
+def test_fit_recipe_accepts_lora_tree(tiny_model):
+    cfg, model, params = tiny_model
+    tree = random_trained_lora(params["lora"], jax.random.PRNGKey(3))
+    rec = LoRAQuantConfig.for_budget(tree, 2.0, ste_steps=0)
+    from repro.serving.engine import quantize_adapter_tree
+
+    qa = quantize_adapter_tree(tree, rec)
+    assert abs(qa.avg_bits() - 2.0) <= 0.25
+    assert rec.ste_steps == 0            # base fields ride through
+
+
+def test_fit_recipe_monotone_error_frontier():
+    """More bits must buy reconstruction fidelity: the relative error of
+    budget-fitted recipes decreases as the target grows."""
+    b, a = decaying_lora(seed=1)
+    w = np.asarray(b) @ np.asarray(a)
+    errs = []
+    for target in (1.0, 2.0, 3.0):
+        rec = fit_recipe([(b, a)], target, base=LoRAQuantConfig(ste_steps=0))
+        q = quantize_lora(jnp.asarray(b), jnp.asarray(a), rec)
+        errs.append(float(np.linalg.norm(np.asarray(q.delta_w()) - w)
+                          / np.linalg.norm(w)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+# --------------------------------------------------------------------------
+# bucketed SGMV dispatch (launch-count acceptance)
+# --------------------------------------------------------------------------
+
+def test_uniform_recipe_batch_is_single_dispatch_per_layer(tiny_model):
+    """Acceptance: a uniform-recipe batch still compiles to exactly ONE
+    SGMV pallas_call per LoRA linear — pack_batch keeps the bare
+    PackedLoRABatch leaf and `linear` dispatches it once."""
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(3):
+        store.register(f"a{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(60 + i), scale=0.05))
+    tree = store.pack_batch(["a0", "a1", "a2"], params["lora"], tile_t=1)
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda n: isinstance(n, (PackedLoRABatch,
+                                               PackedLoRABuckets)))
+        if isinstance(l, (PackedLoRABatch, PackedLoRABuckets))]
+    assert leaves and all(isinstance(l, PackedLoRABatch) for l in leaves)
+
+    pb = jax.tree_util.tree_map(lambda x: x[0], leaves[0])  # one layer
+    pb = dataclasses.replace(pb, seg=jnp.asarray([0, 2, 1], jnp.int32))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, pb.k)).astype(np.float32))
+    base = {"w": jnp.zeros((pb.k, pb.m), jnp.float32)}
+    reset_launch_counts()
+    linear(x, base, pb, scaling=2.0)
+    assert dict(LAUNCH_COUNTS) == {"sgmv_fused": 1}
+
+
+def test_mixed_recipe_batch_is_one_dispatch_per_bucket(tiny_model,
+                                                       mixed_store):
+    """A mixed fleet buckets by layout signature: pack_batch leaves become
+    PackedLoRABuckets and `linear` runs one SGMV dispatch per bucket (u2
+    and u3 share (2-bit, 128) so 4 adapters → 3 buckets), with outputs
+    matching the per-adapter oracle."""
+    cfg, model, params = tiny_model
+    ids = ["u0", "u1", "u2", "u3"]
+    tree = mixed_store.pack_batch(ids, params["lora"], tile_t=1)
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda n: isinstance(n, PackedLoRABuckets))
+        if isinstance(l, PackedLoRABuckets)]
+    assert leaves and all(len(l.buckets) == 3 for l in leaves)
+
+    pbs = jax.tree_util.tree_map(lambda x: x[0], leaves[0])  # one layer
+    seg = jnp.asarray([3, 0, 2, 1], jnp.int32)
+    pbs = dataclasses.replace(pbs, seg=seg)
+    k, m = pbs.buckets[0].k, pbs.buckets[0].m
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(4, k)).astype(np.float32) * 0.1)
+    base = {"w": jnp.zeros((k, m), jnp.float32)}
+    reset_launch_counts()
+    got = linear(x, base, pbs, scaling=1.0)
+    assert dict(LAUNCH_COUNTS) == {"sgmv_fused": 3}
+
+    # oracle: the addressed adapter's dequantized first-layer delta
+    path = None
+    for p in mixed_store.quantized["u0"].entries:
+        q = mixed_store.quantized["u0"].entries[p][0]
+        if q.a_high.orig_shape[1] == k and q.b_high.orig_shape[0] == m:
+            path = p
+            break
+    assert path is not None
+    for row, gidx in enumerate(np.asarray(seg)):
+        q = mixed_store.quantized[ids[gidx]].entries[path][0]
+        want = np.asarray(x[row] @ q.delta_w().T)
+        np.testing.assert_allclose(np.asarray(got[row]), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# end-to-end mixed-precision serving
+# --------------------------------------------------------------------------
+
+def _solo_outputs(cfg, model, params, store, seq, **kw):
+    """Per-request solo materialize runs — the acceptance reference."""
+    out = {}
+    for i, aid in enumerate(seq):
+        eng = MultiLoRAEngine(model, params, store, cache_capacity=64)
+        req = _reqs(cfg, [aid], seed=30 + i, **kw)[0]
+        req.request_id = i
+        eng.submit(req)
+        out[i] = eng.run(mode="materialize")[0].output
+    return out
+
+
+def test_mixed_recipe_batch_matches_solo_materialize(tiny_model,
+                                                     mixed_store):
+    """Acceptance: ONE run() batch mixing all four recipes (4/3/2-bit +
+    binary-dominated) is token-for-token identical to per-adapter solo
+    materialize serving — in static packed mode AND the continuous
+    scheduler (paged, per-signature pools)."""
+    cfg, model, params = tiny_model
+    seq = ["u0", "u1", "u2", "u3"]
+    want = _solo_outputs(cfg, model, params, mixed_store, seq)
+
+    eng = MultiLoRAEngine(model, params, mixed_store, cache_capacity=64,
+                          max_rows=4)
+    for r in _reqs(cfg, seq):
+        eng.submit(r)
+    packed = {r.request_id: r.output for r in eng.run(mode="packed")}
+    for r in _reqs(cfg, seq):
+        eng.submit(r)
+    cont = {r.request_id: r.output for r in eng.run(mode="continuous")}
+    assert packed.keys() == want.keys() == cont.keys()
+    for rid in want:
+        np.testing.assert_array_equal(packed[rid], want[rid])
+        np.testing.assert_array_equal(cont[rid], want[rid])
+    assert eng.memory_stats()["pools"] == 3   # one slot pool per signature
+
+
+def test_mixed_recipe_mid_decode_admission(tiny_model, mixed_store):
+    """Continuous mode: a request whose recipe lives in ANOTHER bucket is
+    admitted while a first request is mid-decode; both match their solo
+    runs (cross-bucket seg remap + per-pool pinning under churn)."""
+    cfg, model, params = tiny_model
+    solo = _solo_outputs(cfg, model, params, mixed_store, ["u0", "u3"],
+                         max_new=6)
+
+    eng = MultiLoRAEngine(model, params, mixed_store, cache_capacity=64,
+                          max_rows=2)
+    r0, r1 = _reqs(cfg, ["u0", "u3"], max_new=6)
+    eng.submit(r0)
+    done = eng.step() + eng.step()            # r0 mid-decode
+    assert eng.active_rows == 1
+    eng.submit(r1)                            # different bucket, mid-decode
+    while eng.pending or eng.active_rows:
+        done += eng.step()
+    got = {r.request_id: r.output for r in done}
+    np.testing.assert_array_equal(got[0], solo[0])
+    np.testing.assert_array_equal(got[1], solo[1])
+
+
+def test_paged_memory_budget_with_unequal_page_sizes(tiny_model):
+    """Acceptance: paged-memory budget accounting uses true per-adapter
+    page bytes — with 2-bit and 4-bit pools the HBM bound holds under
+    churn (evict + reclaim across pools) and outputs stay token-identical
+    to all-resident serving."""
+    cfg, model, params = tiny_model
+    r2 = LoRAQuantConfig(rho=0.9, bits_high=2, ste_steps=0)
+    r4 = LoRAQuantConfig(rho=0.9, bits_high=4, ste_steps=0)
+    trees = {f"m{i}": random_trained_lora(params["lora"],
+                                          jax.random.PRNGKey(40 + i),
+                                          scale=0.05)
+             for i in range(6)}
+    recipes = {f"m{i}": (r2 if i % 2 == 0 else r4) for i in range(6)}
+
+    probe = AdapterStore(r2)
+    probe.register_many(trees, recipes=recipes)
+    from repro.serving.memory import AdapterMemoryManager
+
+    mgr = AdapterMemoryManager(probe, params["lora"])
+    p2, p4 = mgr.page_bytes_of("m0"), mgr.page_bytes_of("m1")
+    assert p2 < p4                            # genuinely unequal pages
+    with pytest.raises(RuntimeError, match="mixed recipe"):
+        mgr.page_bytes
+
+    budget = 2 * p2 + p4 + p4 // 2            # 2 small + 1 large page
+    store = AdapterStore(r2, hbm_budget_bytes=budget)
+    store.register_many(trees, recipes=recipes)
+    seq = [f"m{i}" for i in range(6)] + ["m0", "m1"]
+    eng = MultiLoRAEngine(model, params, store, cache_capacity=64,
+                          max_rows=2)
+    for r in _reqs(cfg, seq, seed=50, max_new=3):
+        eng.submit(r)
+    got = {r.request_id: r.output for r in eng.run()}
+    assert eng.memory.hbm_bytes() <= budget   # bound uses REAL page bytes
+    assert eng.memory_stats()["evictions"] > 0
+
+    all_res = AdapterStore(r2)
+    all_res.register_many(trees, recipes=recipes)
+    ref_eng = MultiLoRAEngine(model, params, all_res, cache_capacity=64,
+                              max_rows=2)
+    for r in _reqs(cfg, seq, seed=50, max_new=3):
+        ref_eng.submit(r)
+    ref = {r.request_id: r.output for r in ref_eng.run()}
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid])
+
+
+def test_reregister_with_new_recipe_reconciles_all_tiers(tiny_model):
+    """Re-registering an id with a different recipe must serve the new
+    codes everywhere: packed layout caches rebuild and the paged tier
+    moves the page to its new signature pool."""
+    cfg, model, params = tiny_model
+    tree = random_trained_lora(params["lora"], jax.random.PRNGKey(77),
+                               scale=0.05)
+    r2 = LoRAQuantConfig(rho=0.9, bits_high=2, ste_steps=0)
+    r4 = LoRAQuantConfig(rho=0.95, bits_high=4, ste_steps=0)
+
+    store = AdapterStore(r2)
+    store.register("u", tree)
+    eng = MultiLoRAEngine(model, params, store, cache_capacity=64)
+    eng.submit(_reqs(cfg, ["u"], seed=9)[0])
+    eng.run()
+    assert store.signature_of("u") == r2.layout_signature
+
+    store.register("u", tree, recipe=r4)      # same weights, richer recipe
+    assert store.signature_of("u") == r4.layout_signature
+    eng.submit(_reqs(cfg, ["u"], seed=9)[0])
+    got = eng.run()[0].output
+
+    fresh = AdapterStore(r4)
+    fresh.register("u", tree, recipe=r4)
+    feng = MultiLoRAEngine(model, params, fresh, cache_capacity=64)
+    feng.submit(_reqs(cfg, ["u"], seed=9)[0])
+    np.testing.assert_array_equal(got, feng.run()[0].output)
+    assert eng.memory.resident("u")
+    assert eng.memory._where["u"][0] == r4.layout_signature
+
+
+@pytest.mark.slow
+def test_moe_mixed_recipe_packed_parity():
+    """MoE fold × mixed buckets: per-expert adapter leaves under two
+    different recipes serve packed (expert axis folded bucket-locally)
+    token-for-token equal to the materialize reference."""
+    cfg = smoke_cfg("mixtral-8x22b")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = AdapterStore(LoRAQuantConfig(ste_steps=0))
+    store.register_many(
+        {"e0": random_trained_lora(params["lora"], jax.random.PRNGKey(7),
+                                   scale=0.05),
+         "e1": random_trained_lora(params["lora"], jax.random.PRNGKey(8),
+                                   scale=0.05)},
+        recipes={"e0": LoRAQuantConfig(rho=0.9, bits_high=2, ste_steps=0),
+                 "e1": LoRAQuantConfig(rho=0.95, bits_high=4, ste_steps=0)})
+    engine = MultiLoRAEngine(model, params, store, cache_capacity=32)
+    for r in _reqs(cfg, ["e0", "e1", "e0"], seed=3, max_new=2):
+        engine.submit(r)
+    cont = {r.request_id: r.output for r in engine.run()}
+    assert store.fp_resident_bytes() == 0
+    for r in _reqs(cfg, ["e0", "e1", "e0"], seed=3, max_new=2):
+        engine.submit(r)
+    ref = {r.request_id: r.output for r in engine.run(mode="materialize")}
+    for rid in ref:
+        np.testing.assert_array_equal(cont[rid], ref[rid])
+
+
+# --------------------------------------------------------------------------
+# API migration / deprecation shim
+# --------------------------------------------------------------------------
+
+def test_store_config_kwarg_deprecation_shim(tiny_model):
+    cfg, model, params = tiny_model
+    rec = LoRAQuantConfig(rho=0.8, ste_steps=0)
+    with pytest.warns(DeprecationWarning, match="default_recipe"):
+        store = AdapterStore(config=rec)
+    assert store.default_recipe is rec
+    assert store.config is rec                # old attribute still reads
+    store.register("u", random_trained_lora(params["lora"],
+                                            jax.random.PRNGKey(1)))
+    assert store.recipe_of("u") is rec
+    with pytest.raises(TypeError):
+        AdapterStore(rec, config=rec)
+
+
+def test_positional_config_still_works_without_warning(tiny_model):
+    """The old positional call AdapterStore(cfg) is the new
+    default_recipe positional — no warning, identical behavior."""
+    cfg, model, params = tiny_model
+    rec = LoRAQuantConfig(rho=0.8, ste_steps=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        store = AdapterStore(rec)
+    assert store.default_recipe is rec
+    assert QuantRecipe is LoRAQuantConfig     # the serving-facing alias
