@@ -1,0 +1,190 @@
+"""Chaos benchmark: the serving engine under a seeded fault storm.
+
+The acceptance scenario of the robustness PR (``docs/robustness.md``): one
+`MultiLoRAEngine` over a slot-constrained paged pool is driven through a
+deterministic :class:`~repro.serving.faults.FaultPlan` storm — host-read
+latency spikes, transient read failures absorbed by the transport's retry
+budget, one adapter whose pages come back corrupted (quarantine), plus an
+externally **all-pinned pool episode** mid-run — and compared against the
+identical request stream on a fault-free engine.
+
+Reported per run: **goodput** (tokens of healthy DONE requests per
+second), **p99 step latency**, and the storm's **recovery** (steps from
+the end of the all-pinned episode to the next completed request).
+Checks (the hard acceptance criteria):
+
+* every healthy in-deadline request finishes DONE with tokens identical
+  to the fault-free run (the poisoned adapter's requests FAIL, the
+  deliberately-impossible-deadline request TIMES OUT — in both runs the
+  statuses are exact),
+* admission never deadlocks (the run completes under a hard step cap
+  even while every slot is pinned),
+* goodput under the storm stays within ``GOODPUT_BOUND`` of baseline.
+
+Latencies are interpret-mode CPU numbers; the *relative* storm-vs-baseline
+comparison and the parity/status checks are the decision-grade output.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LoRAQuantConfig
+from repro.launch.serve import random_trained_lora
+from repro.models import build_model
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.faults import FaultPlan, HostTransport, RequestStatus
+
+N_ADAPTERS = 6
+N_REQUESTS = 12
+PROMPT_LEN = 8
+MAX_NEW = 4
+SLOTS = 3                    # half the fleet resident: real paging traffic
+ROWS = 3
+BAD = "user_1"               # the storm corrupts this adapter's pages
+DEADLINE_MS = 120_000.0      # generous: healthy requests must NOT time out
+PIN_AT, PIN_STEPS = 3, 2     # all-pinned episode: start step, duration
+STEP_CAP = 500               # deadlock tripwire
+GOODPUT_BOUND = 0.5          # storm goodput >= bound * baseline goodput
+
+
+def _storm_plan() -> FaultPlan:
+    return FaultPlan(seed=29, read_latency_s=0.003, read_latency_prob=0.3,
+                     transient_fail_prob=0.3,
+                     corrupt_adapters=frozenset({BAD}))
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(23)
+    reqs = [Request(request_id=rid, adapter_id=f"user_{rid % N_ADAPTERS}",
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=PROMPT_LEN).astype(np.int32),
+                    max_new_tokens=MAX_NEW, deadline_ms=DEADLINE_MS)
+            for rid in range(N_REQUESTS)]
+    # one deliberately impossible TTFT budget: must retire TIMED_OUT (in
+    # the baseline too — deadline handling is not fault-injection-gated)
+    reqs.append(Request(request_id=N_REQUESTS, adapter_id="user_0",
+                        prompt=rng.integers(0, cfg.vocab,
+                                            size=PROMPT_LEN).astype(np.int32),
+                        max_new_tokens=MAX_NEW, ttft_deadline_ms=1e-3))
+    return reqs
+
+
+def _drive(cfg, model, params, store, faults):
+    """One full run: submit the stream, step to completion with the
+    all-pinned episode injected, collect per-step latencies + terminals."""
+    transport = (HostTransport(faults=faults, max_retries=6)
+                 if faults is not None else None)
+    eng = MultiLoRAEngine(model, params, store, cache_capacity=64,
+                          max_rows=ROWS, hbm_slots=SLOTS,
+                          faults=faults, transport=transport)
+    reqs = _requests(cfg)
+    for r in reqs:
+        eng.submit(r)
+    mgr = eng.memory
+    lats, done, steps = [], [], 0
+    pinned_ids, episode_end_step = [], None
+    recovery_steps = None
+    t0 = time.perf_counter()
+    while eng.pending or eng.active_rows or eng._terminated:
+        if steps == PIN_AT:                   # pin EVERY slot externally
+            pinned_ids = [aid for aid in list(mgr._where)]
+            for aid in pinned_ids:
+                mgr.pin(aid)
+        if steps == PIN_AT + PIN_STEPS and pinned_ids:
+            for aid in pinned_ids:
+                mgr.unpin(aid)
+            pinned_ids, episode_end_step = [], steps
+        ts = time.perf_counter()
+        fin = eng.step()
+        lats.append(time.perf_counter() - ts)
+        done += fin
+        steps += 1
+        if (episode_end_step is not None and recovery_steps is None
+                and any(r.status is RequestStatus.DONE for r in fin)):
+            recovery_steps = steps - episode_end_step
+        if steps >= STEP_CAP:
+            break
+    wall = time.perf_counter() - t0
+    return {"reqs": reqs, "done": done, "steps": steps, "wall": wall,
+            "lats": np.asarray(lats), "recovery_steps": recovery_steps,
+            "mem": eng.memory_stats(), "eng": eng}
+
+
+def _goodput(run) -> float:
+    toks = sum(len(r.output) for r in run["reqs"]
+               if r.status is RequestStatus.DONE)
+    return toks / run["wall"]
+
+
+def run(report):
+    import dataclasses as dc
+    import jax.numpy as jnp
+
+    cfg = dc.replace(get_config("llama3.2-3b", "smoke"), dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    store.register_many({
+        f"user_{i}": random_trained_lora(params["lora"],
+                                         jax.random.PRNGKey(40 + i),
+                                         scale=0.05)
+        for i in range(N_ADAPTERS)})
+
+    _drive(cfg, model, params, store, None)       # warmup (jit traces)
+    base = _drive(cfg, model, params, store, None)
+    plan = _storm_plan()
+    storm = _drive(cfg, model, params, store, plan)
+
+    def line(name, run_):
+        gp = _goodput(run_)
+        p99 = float(np.percentile(run_["lats"] * 1e3, 99))
+        report(f"serving.chaos,{name},requests={len(run_['reqs'])},"
+               f"adapters={N_ADAPTERS},slots={SLOTS},rows={ROWS},"
+               f"goodput_tok_s={gp:.1f}(interpret),"
+               f"p99_step_ms={p99:.1f},steps={run_['steps']},"
+               f"wall_s={run_['wall']:.2f},"
+               f"stale_serves={run_['mem']['stale_serves']:.0f},"
+               f"retries={run_['mem']['host_read_retries']:.0f},"
+               f"read_failures={run_['mem']['host_read_failures']:.0f}")
+        return gp
+
+    gp_base = line("baseline", base)
+    gp_storm = line("storm", storm)
+    inj = plan.injected
+    report(f"serving.chaos,injected,latency={inj.get('read_latency', 0)},"
+           f"transient={inj.get('read_fail_transient', 0)},"
+           f"corruption={inj.get('page_corruption', 0)},"
+           f"recovery_steps={storm['recovery_steps']}")
+
+    # ---- acceptance checks ----
+    by_id = {r.request_id: r for r in base["reqs"]}
+    statuses_ok, parity = True, True
+    for r in storm["reqs"]:
+        b = by_id[r.request_id]
+        if r.adapter_id == BAD:
+            statuses_ok &= r.status is RequestStatus.FAILED
+            statuses_ok &= b.status is RequestStatus.DONE  # fault-free: fine
+        elif r.ttft_deadline_ms is not None:
+            statuses_ok &= r.status is RequestStatus.TIMED_OUT
+            statuses_ok &= b.status is RequestStatus.TIMED_OUT
+        else:
+            statuses_ok &= (r.status is RequestStatus.DONE
+                            and b.status is RequestStatus.DONE)
+            parity &= np.array_equal(r.output, b.output)
+    report(f"serving.check,chaos_healthy_token_parity,"
+           f"{'PASS' if parity else 'FAIL'}")
+    report(f"serving.check,chaos_statuses_correct,"
+           f"{'PASS' if statuses_ok else 'FAIL'}")
+    no_deadlock = (base["steps"] < STEP_CAP and storm["steps"] < STEP_CAP
+                   and not storm["eng"].pending
+                   and storm["eng"].active_rows == 0)
+    report(f"serving.check,chaos_no_deadlock,"
+           f"{'PASS' if no_deadlock else 'FAIL'}")
+    report(f"serving.check,chaos_goodput_within_bound,bound={GOODPUT_BOUND},"
+           f"{'PASS' if gp_storm >= GOODPUT_BOUND * gp_base else 'FAIL'}")
+    return gp_storm

@@ -40,12 +40,13 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset (table1,table2,fig2,fig3,"
-                        "fig4,fig6,kernels,recipes,serving)")
+                        "fig4,fig6,kernels,recipes,serving,chaos)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write parsed metrics + checks to this JSON file")
     args = p.parse_args(argv)
 
     from . import (
+        bench_chaos,
         bench_kernels,
         bench_recipes,
         bench_serving,
@@ -61,6 +62,7 @@ def main(argv=None):
         "kernels": bench_kernels.run,
         "recipes": bench_recipes.run,
         "serving": bench_serving.run,
+        "chaos": bench_chaos.run,
         "table2": table2_avgbits.run,
         "fig6": fig6_memory.run,
         "table1": table1_quality.run,

@@ -21,6 +21,7 @@ from repro.configs import get_config
 from repro.core import LoRAQuantConfig
 from repro.models import build_model
 from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.faults import RequestStatus, named_plan
 
 
 def parse_variant(s: str) -> LoRAQuantConfig:
@@ -102,6 +103,22 @@ def main(argv=None):
                         "in MB; the slot count is derived as "
                         "budget // page_bytes (--slots wins if both given)")
     p.add_argument("--no-quant", action="store_true")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request total wall-clock deadline; requests "
+                        "still running past it retire TIMED_OUT with their "
+                        "partial output (docs/robustness.md)")
+    p.add_argument("--queue-limit", type=int, default=None,
+                   help="bounded pending queue: submits past this depth hit "
+                        "backpressure (--queue-policy)")
+    p.add_argument("--queue-policy", default="reject",
+                   choices=("reject", "shed_oldest"),
+                   help="what a full queue does: reject the NEW request, or "
+                        "shed the oldest pending one to make room")
+    p.add_argument("--inject", default=None,
+                   metavar="PLAN",
+                   help="named fault plan (none|latency|transient|poison|"
+                        "storm) injected into host reads and uploads — the "
+                        "chaos harness of docs/robustness.md")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -116,7 +133,8 @@ def main(argv=None):
         qcfg = dataclasses.replace(qcfg, bits_high=16)
     budget = (int(args.hbm_budget * 1e6)
               if args.hbm_budget is not None else None)
-    store = AdapterStore(qcfg, hbm_budget_bytes=budget)
+    plan = named_plan(args.inject) if args.inject else None
+    store = AdapterStore(qcfg, hbm_budget_bytes=budget, faults=plan)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     recipes = dict(parse_recipe_override(s) for s in args.recipe)
@@ -141,13 +159,20 @@ def main(argv=None):
         print(f"[serve] fitted default recipe for {args.target_bits} avg "
               f"bits: {qcfg.variant_name}")
     # one bucketed dispatch per (recipe, leaf shape)
-    store.register_many(uploads, recipes=recipes)
+    store.register_many(uploads, recipes=recipes,
+                        on_error="skip" if plan else "raise")
+    if store.onboard_errors:
+        print(f"[serve] rejected uploads: {store.onboard_errors}")
     print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
           f"store stats: {store.stats()}")
 
     engine = MultiLoRAEngine(model, params, store, cache_capacity=128,
                              mode=args.mode, max_rows=args.max_rows,
-                             hbm_slots=args.slots)
+                             hbm_slots=args.slots,
+                             queue_limit=args.queue_limit,
+                             queue_policy=args.queue_policy,
+                             default_deadline_ms=args.deadline_ms,
+                             faults=plan)
     drng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -159,10 +184,21 @@ def main(argv=None):
     t0 = time.perf_counter()
     done = engine.run()
     dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.output) for r in done)
-    print(f"[serve] mode={args.mode}: {len(done)} requests, {total_tokens} "
-          f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s); "
+    ok = [r for r in done if r.status is RequestStatus.DONE]
+    total_tokens = sum(len(r.output) for r in ok)
+    by_status = {}
+    for r in done:
+        by_status[r.status.value] = by_status.get(r.status.value, 0) + 1
+    print(f"[serve] mode={args.mode}: {len(done)} requests "
+          f"({', '.join(f'{k}={v}' for k, v in sorted(by_status.items()))}), "
+          f"{total_tokens} tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s); "
           f"fp-resident LoRA bytes: {store.fp_resident_bytes()}")
+    bad = [r for r in done if r.status is not RequestStatus.DONE]
+    for r in bad[:8]:
+        print(f"[serve]   request {r.request_id} ({r.adapter_id}): "
+              f"{r.status.value} — {r.error}")
+    if engine.quarantined:
+        print(f"[serve] quarantined adapters: {sorted(engine.quarantined)}")
     mem = engine.memory_stats()
     if mem:
         print(f"[serve] adapter memory: {mem['slots']} slots in "
@@ -177,7 +213,9 @@ def main(argv=None):
     col = " ".join(f"{aid}={st['avg_bits']:.2f}"
                    for aid, st in sorted(per.items()))
     print(f"[serve] per-adapter avg_bits: {col}")
-    print(f"[serve] sample output (req 0): {done[0].output.tolist()}")
+    if ok:
+        print(f"[serve] sample output (req {ok[0].request_id}): "
+              f"{ok[0].output.tolist()}")
     return done
 
 

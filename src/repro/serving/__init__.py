@@ -6,10 +6,26 @@ from .engine import (
     dequantize_adapter,
     quantize_adapter_tree,
 )
+from .faults import (
+    AdapterValidationError,
+    DeadlineExceeded,
+    FaultPlan,
+    HostReadError,
+    HostTransport,
+    MemoryExhausted,
+    PoisonedAdapter,
+    QueueFull,
+    RequestError,
+    RequestStatus,
+    UnknownAdapter,
+    named_plan,
+)
 from .memory import AdapterMemoryManager
 
 __all__ = [
-    "AdapterMemoryManager", "AdapterStore", "MultiLoRAEngine",
-    "QuantizedAdapter", "Request", "dequantize_adapter",
-    "quantize_adapter_tree",
+    "AdapterMemoryManager", "AdapterStore", "AdapterValidationError",
+    "DeadlineExceeded", "FaultPlan", "HostReadError", "HostTransport",
+    "MemoryExhausted", "MultiLoRAEngine", "PoisonedAdapter", "QuantizedAdapter",
+    "QueueFull", "Request", "RequestError", "RequestStatus", "UnknownAdapter",
+    "dequantize_adapter", "named_plan", "quantize_adapter_tree",
 ]

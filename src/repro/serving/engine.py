@@ -65,6 +65,20 @@ from repro.kernels import (
     retile_packed,
     stack_packed_adapters,
 )
+from repro.serving.faults import (
+    AdapterValidationError,
+    DeadlineExceeded,
+    FaultPlan,
+    HostReadError,
+    HostTransport,
+    MemoryExhausted,
+    PoisonedAdapter,
+    QueueFull,
+    RequestError,
+    RequestStatus,
+    UnknownAdapter,
+    validate_lora_tree,
+)
 
 
 def iter_lora_linears(lora_tree) -> List[Tuple[str, Any]]:
@@ -249,7 +263,8 @@ class AdapterStore:
                  fp_cache_bytes: int = 1 << 30,
                  batched_quantize: bool = True,
                  hbm_budget_bytes: Optional[int] = None,
-                 *, config: Optional[QuantRecipe] = None):
+                 *, config: Optional[QuantRecipe] = None,
+                 faults: Optional[FaultPlan] = None):
         if config is not None:
             warnings.warn(
                 "AdapterStore(config=...) is deprecated; the store-wide "
@@ -271,6 +286,9 @@ class AdapterStore:
         self._batch_cache: Dict[tuple, Any] = {}
         self._versions: Dict[str, int] = {}
         self._mutations: int = 0
+        self.faults = faults               # onboarding fault injection
+        self._integrity: Dict[str, Tuple[int, bool]] = {}   # aid -> (ver, ok)
+        self.onboard_errors: Dict[str, str] = {}   # last register_many skips
 
     def _invalidate(self, adapter_id: str):
         self._lru.pop(adapter_id, None)
@@ -312,11 +330,24 @@ class AdapterStore:
         return self.quantized[adapter_id].signature
 
     def register(self, adapter_id: str, lora_tree,
-                 recipe: Optional[QuantRecipe] = None) -> QuantizedAdapter:
+                 recipe: Optional[QuantRecipe] = None,
+                 validate: bool = True) -> QuantizedAdapter:
         """Quantize and register one adapter under ``recipe`` (default: the
         store's :attr:`default_recipe`). Re-registering with a different
         recipe reconciles every cache tier exactly like a weight update —
-        versions bump, packed layouts and pages rebuild."""
+        versions bump, packed layouts and pages rebuild.
+
+        ``validate=True`` (default) screens the upload **before**
+        quantization — NaN/Inf values, rank-mismatched factor shapes, and
+        injected onboarding faults all raise
+        :class:`~repro.serving.faults.AdapterValidationError` so a
+        poisoned upload never enters the registry. ``validate=False`` is
+        for trusted re-registration paths (and for tests exercising the
+        downstream quarantine defenses)."""
+        if validate:
+            if self.faults is not None:
+                self.faults.check_onboard(adapter_id)
+            validate_lora_tree(lora_tree, adapter_id)
         qa = quantize_adapter_tree(lora_tree, recipe or self.default_recipe,
                                    batched=self.batched_quantize)
         self._invalidate(adapter_id)
@@ -332,8 +363,10 @@ class AdapterStore:
     def unregister(self, adapter_id: str):
         """Drop an adapter: quantized entries, fp LRU entry, packed-layout
         and batch caches all go. Requests already decoding keep their codes
-        (the paged tier pins live pages); new requests for the id fail
-        admission with ``KeyError``."""
+        — the paged tier marks the page *dead* and reaps it on the last
+        unpin (deferred unregister, ``docs/robustness.md``); new requests
+        for the id are REJECTED with
+        :class:`~repro.serving.faults.UnknownAdapter`."""
         if adapter_id not in self.quantized:
             raise KeyError(f"adapter {adapter_id!r} is not registered")
         del self.quantized[adapter_id]
@@ -343,6 +376,7 @@ class AdapterStore:
 
     def register_many(self, trees: Dict[str, Any],
                       recipes: Optional[Dict[str, QuantRecipe]] = None,
+                      validate: bool = True, on_error: str = "raise",
                       ) -> Dict[str, QuantizedAdapter]:
         """Onboard many uploaded adapters in one bucketed dispatch per
         recipe.
@@ -355,10 +389,34 @@ class AdapterStore:
         batched onboarding across adapters). ``recipes`` maps adapter ids
         to per-upload recipe overrides (missing ids use the default). Math
         per adapter is identical to :meth:`register`.
+
+        ``validate=True`` screens every upload like :meth:`register`;
+        ``on_error="raise"`` (default) aborts the whole batch on the first
+        bad upload, ``on_error="skip"`` registers the healthy uploads and
+        records the rejects in :attr:`onboard_errors` (id → message) —
+        one poisoned tenant must not block the rest of the fleet.
         """
+        if on_error not in ("raise", "skip"):
+            raise ValueError(f"on_error must be 'raise' or 'skip', "
+                             f"got {on_error!r}")
         recipes = recipes or {}
+        self.onboard_errors = {}
+        accepted = list(trees)
+        if validate:
+            accepted = []
+            for adapter_id in trees:
+                try:
+                    if self.faults is not None:
+                        self.faults.check_onboard(adapter_id)
+                    validate_lora_tree(trees[adapter_id], adapter_id)
+                except AdapterValidationError as e:
+                    if on_error == "raise":
+                        raise
+                    self.onboard_errors[adapter_id] = str(e)
+                else:
+                    accepted.append(adapter_id)
         by_recipe: Dict[QuantRecipe, List[str]] = {}
-        for adapter_id in trees:
+        for adapter_id in accepted:
             rec = recipes.get(adapter_id, self.default_recipe)
             by_recipe.setdefault(rec, []).append(adapter_id)
         out: Dict[str, QuantizedAdapter] = {}
@@ -380,9 +438,35 @@ class AdapterStore:
                     qa = out[adapter_id] = QuantizedAdapter(
                         entries={}, template=template, recipe=rec)
                 qa.entries[path] = qls
-        for adapter_id in trees:                     # preserve upload order
+        for adapter_id in accepted:                  # preserve upload order
             self.register_quantized(adapter_id, out[adapter_id])
         return out
+
+    def check_integrity(self, adapter_id: str) -> bool:
+        """True iff the adapter's quantized entries are finite (float
+        fields — scales/zeros; integer codes cannot encode NaN). Cached
+        per registration version, so steady-state serving pays one scan
+        per adapter per (re-)register, not per step."""
+        ver = self._versions.get(adapter_id, -1)
+        cached = self._integrity.get(adapter_id)
+        if cached is not None and cached[0] == ver:
+            return cached[1]
+        ok = True
+        qa = self.quantized[adapter_id]
+        for qs in qa.entries.values():
+            for q in qs:
+                for leaf in jax.tree_util.tree_leaves(q):
+                    arr = np.asarray(leaf)
+                    if (np.issubdtype(arr.dtype, np.floating)
+                            and not np.isfinite(arr).all()):
+                        ok = False
+                        break
+                if not ok:
+                    break
+            if not ok:
+                break
+        self._integrity[adapter_id] = (ver, ok)
+        return ok
 
     def _tree_bytes(self, tree) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
@@ -536,13 +620,29 @@ class AdapterStore:
 
 @dataclasses.dataclass
 class Request:
+    """One generation request with its lifecycle state.
+
+    ``status`` walks PENDING → RUNNING → DONE on the happy path; the
+    terminal failure states (REJECTED / TIMED_OUT / FAILED) carry a
+    structured ``error`` from the :mod:`repro.serving.faults` taxonomy and
+    keep whatever tokens were produced (``docs/robustness.md``).
+    ``deadline_ms`` is the total wall-clock budget from submit;
+    ``ttft_deadline_ms`` bounds the wait for the *first* token — both are
+    checked every scheduler step.
+    """
+
     request_id: int
     adapter_id: str
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None        # retire early when this token appears
+    deadline_ms: Optional[float] = None      # total budget (submit → done)
+    ttft_deadline_ms: Optional[float] = None  # budget to the first token
     output: Optional[np.ndarray] = None
     t_first: Optional[float] = None     # wall clock of first generated token
+    t_submit: Optional[float] = None    # wall clock of submit (deadline base)
+    status: RequestStatus = RequestStatus.PENDING
+    error: Optional[RequestError] = None
 
 
 @dataclasses.dataclass
@@ -602,7 +702,16 @@ class MultiLoRAEngine:
     def __init__(self, model, base_params, store: AdapterStore,
                  cache_capacity: int = 512, mode: str = "continuous",
                  seg_tile: int = 8, interpret: bool = True,
-                 max_rows: int = 8, hbm_slots: Optional[int] = None):
+                 max_rows: int = 8, hbm_slots: Optional[int] = None,
+                 queue_limit: Optional[int] = None,
+                 queue_policy: str = "reject",
+                 hol_bypass: bool = True, stall_limit: int = 3,
+                 default_deadline_ms: Optional[float] = None,
+                 faults: Optional[FaultPlan] = None,
+                 transport: Optional[HostTransport] = None):
+        if queue_policy not in ("reject", "shed_oldest"):
+            raise ValueError(f"queue_policy must be 'reject' or "
+                             f"'shed_oldest', got {queue_policy!r}")
         self.model = model
         self.params = base_params         # {"base", "lora"(template)}
         self.store = store
@@ -612,7 +721,21 @@ class MultiLoRAEngine:
         self.interpret = interpret
         self.max_rows = max_rows
         self.hbm_slots = hbm_slots
+        self.queue_limit = queue_limit
+        self.queue_policy = queue_policy
+        self.hol_bypass = hol_bypass
+        self.stall_limit = stall_limit
+        self.default_deadline_ms = default_deadline_ms
+        self.faults = faults
+        self.transport = transport
         self.pending: List[Request] = []
+        # adapters quarantined at fault time: id -> store version when
+        # quarantined (a re-register bumps the version and auto-clears)
+        self.quarantined: Dict[str, Optional[int]] = {}
+        # requests terminated outside step() (queue shedding) — drained
+        # into the next step's finished list so callers see every terminal
+        self._terminated: List[Request] = []
+        self._stalled_steps = 0
         self._rows: List[Optional[_Row]] = [None] * max_rows
         self._caches = None               # persistent (max_rows)-row caches
         self._memory = None               # paged adapter memory (lazy)
@@ -628,8 +751,100 @@ class MultiLoRAEngine:
             lambda g, r, idx: jax.tree_util.tree_map(
                 lambda gg, rr: gg.at[:, idx].set(rr.astype(gg.dtype)), g, r))
 
-    def submit(self, req: Request):
+    # ----- request lifecycle -----
+
+    @staticmethod
+    def _finalize(req: Request, status: RequestStatus,
+                  error: Optional[RequestError] = None) -> Request:
+        """Move a request to a terminal state. Terminal requests always
+        carry ``output`` (possibly empty) so callers never branch on
+        ``None``; non-DONE terminals carry the structured ``error``."""
+        req.status = status
+        req.error = error
+        if req.output is None:
+            req.output = np.zeros((0,), np.int32)
+        return req
+
+    def _quarantine(self, adapter_id: str):
+        self.quarantined[adapter_id] = self.store.version(adapter_id)
+
+    def _is_quarantined(self, adapter_id: str) -> bool:
+        """Quarantine is keyed to the registration version at fault time:
+        a re-register (fixed upload) bumps the version and clears it."""
+        if adapter_id not in self.quarantined:
+            return False
+        ver = self.store.version(adapter_id)
+        if ver is not None and ver != self.quarantined[adapter_id]:
+            del self.quarantined[adapter_id]     # re-registered: recovered
+            return False
+        return True
+
+    @staticmethod
+    def _queue_expired(req: Request,
+                       now: float) -> Optional[DeadlineExceeded]:
+        """Deadline check for a request still waiting in the queue (no
+        tokens yet): both the TTFT and the total budget bound the wait."""
+        if req.t_submit is None:
+            return None
+        waited_ms = (now - req.t_submit) * 1e3
+        for name, budget in (("ttft", req.ttft_deadline_ms),
+                             ("total", req.deadline_ms)):
+            if budget is not None and waited_ms > budget:
+                return DeadlineExceeded(
+                    f"request {req.request_id}: {name} deadline "
+                    f"({budget:g} ms) expired after {waited_ms:.1f} ms in "
+                    f"queue", adapter_id=req.adapter_id)
+        return None
+
+    def _reject_now(self, req: Request) -> Optional[Request]:
+        """Submit-time screening: unknown and quarantined adapters are
+        terminal immediately (never enqueued)."""
+        if self._is_quarantined(req.adapter_id):
+            return self._finalize(req, RequestStatus.FAILED, PoisonedAdapter(
+                f"request {req.request_id}: adapter {req.adapter_id!r} is "
+                f"quarantined", adapter_id=req.adapter_id))
+        if req.adapter_id not in self.store.quantized:
+            return self._finalize(req, RequestStatus.REJECTED, UnknownAdapter(
+                f"request {req.request_id}: adapter {req.adapter_id!r} is "
+                f"not registered in the AdapterStore",
+                adapter_id=req.adapter_id))
+        return None
+
+    def submit(self, req: Request) -> Request:
+        """Enqueue a request, returning it with its (possibly already
+        terminal) status.
+
+        Screening happens **here**, not deep inside admission: an unknown
+        or unregistered adapter id is REJECTED with
+        :class:`~repro.serving.faults.UnknownAdapter`; a quarantined
+        adapter FAILS with :class:`~repro.serving.faults.PoisonedAdapter`.
+        With a bounded queue (``queue_limit``) the backpressure policy
+        decides who pays: ``"reject"`` rejects the new arrival with
+        :class:`~repro.serving.faults.QueueFull`; ``"shed_oldest"`` admits
+        it and rejects the oldest still-queued request instead (the shed
+        request is returned from the next :meth:`step`).
+        """
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        if req.deadline_ms is None:
+            req.deadline_ms = self.default_deadline_ms
+        if self._reject_now(req) is not None:
+            return req
+        if (self.queue_limit is not None
+                and len(self.pending) >= self.queue_limit):
+            if self.queue_policy == "reject":
+                return self._finalize(req, RequestStatus.REJECTED, QueueFull(
+                    f"request {req.request_id}: pending queue full "
+                    f"({self.queue_limit})", adapter_id=req.adapter_id))
+            shed = self.pending.pop(0)           # shed_oldest
+            self._terminated.append(self._finalize(
+                shed, RequestStatus.REJECTED, QueueFull(
+                    f"request {shed.request_id}: shed by newer arrival "
+                    f"under shed_oldest backpressure",
+                    adapter_id=shed.adapter_id)))
+        req.status = RequestStatus.PENDING
         self.pending.append(req)
+        return req
 
     def _segments(self, reqs: Sequence[Request]) -> Dict[str, List[Request]]:
         segs: Dict[str, List[Request]] = collections.defaultdict(list)
@@ -660,6 +875,7 @@ class MultiLoRAEngine:
         now = time.perf_counter()
         for r in reqs:
             r.t_first = now
+            r.status = RequestStatus.RUNNING
         n_new = max(r.max_new_tokens for r in reqs)
         outs = [last]
         start_arr = jnp.asarray(starts)
@@ -678,6 +894,7 @@ class MultiLoRAEngine:
                 if hits.size:
                     out = out[: hits[0] + 1]
             r.output = out
+            self._finalize(r, RequestStatus.DONE)
 
     def _run_packed(self, reqs: List[Request]) -> List[Request]:
         """One heterogeneous batch: decode straight from packed codes."""
@@ -719,7 +936,8 @@ class MultiLoRAEngine:
 
             self._memory = AdapterMemoryManager(
                 self.store, self.params["lora"], num_slots=self.hbm_slots,
-                tile_t=self.seg_tile, interpret=self.interpret)
+                tile_t=self.seg_tile, interpret=self.interpret,
+                transport=self.transport, faults=self.faults)
         return self._memory
 
     def memory_stats(self) -> Dict[str, float]:
@@ -763,6 +981,7 @@ class MultiLoRAEngine:
         out = []
         for b, (req, row_idx) in enumerate(zip(reqs, rows)):
             req.t_first = now
+            req.status = RequestStatus.RUNNING
             row = _Row(req=req, start=int(starts[b]),
                        prompt_len=len(req.prompt), emitted=[int(firsts[b])])
             self._rows[row_idx] = row
@@ -775,15 +994,18 @@ class MultiLoRAEngine:
         return (len(row.emitted) >= r.max_new_tokens
                 or (r.eos_id is not None and row.emitted[-1] == r.eos_id))
 
-    def _retire(self, row_idx: int) -> Request:
+    def _retire(self, row_idx: int,
+                status: RequestStatus = RequestStatus.DONE,
+                error: Optional[RequestError] = None) -> Request:
         row = self._rows[row_idx]
         self._rows[row_idx] = None
         self.memory.unpin(row.req.adapter_id)   # slot becomes evictable
         # prefill always seeds one token; cap at the budget so degenerate
-        # max_new_tokens <= 0 requests match the static modes' empty output
+        # max_new_tokens <= 0 requests match the static modes' empty output.
+        # Failure retirements keep the partial output produced so far.
         row.req.output = np.asarray(
             row.emitted[: max(row.req.max_new_tokens, 0)], np.int32)
-        return row.req
+        return self._finalize(row.req, status, error)
 
     def _prefetch_upcoming(self):
         """Stage the next admission wave's adapter pages one step ahead.
@@ -792,23 +1014,103 @@ class MultiLoRAEngine:
         upcoming: List[str] = []
         seen = set()
         for r in self.pending[: self.max_rows]:
-            if r.adapter_id not in seen:
+            if (r.adapter_id not in seen
+                    and r.adapter_id in self.store.quantized
+                    and not self._is_quarantined(r.adapter_id)):
                 seen.add(r.adapter_id)
                 upcoming.append(r.adapter_id)
         if upcoming:
             self.memory.prefetch(upcoming)
 
+    def _select_admissions(self, n_free: int,
+                           finished: List[Request]) -> List[Request]:
+        """Pick this step's admission group from the pending queue.
+
+        FIFO over the queue with the failure contract applied per request:
+        quarantined adapters FAIL, unregistered ones are REJECTED (neither
+        consumes a row); requests padding to a different length than the
+        group's anchor wait for the next wave (one prefill batch has ONE
+        padded length). ``memory.acquire`` maps each admitted adapter to a
+        pinned slot — a poisoned page quarantines the adapter and FAILS
+        the request, a persistently failing host read REJECTS it with
+        :class:`~repro.serving.faults.MemoryExhausted`, and an all-pinned
+        pool stalls the wave: with ``hol_bypass`` requests for
+        still-resident adapters may jump the stalled head (a residency hit
+        pins an existing page and steals no slot), anyone else waits in
+        order. The group's pages are all pinned on return; read slot ids
+        *after* the whole group's acquires (a later acquire may grow a
+        pool and shift earlier global ids).
+        """
+        mgr = self.memory
+        group: List[Request] = []
+        rest: List[Request] = []
+        tpad0: Optional[int] = None
+        stalled = False
+        for k, r in enumerate(self.pending):
+            if len(group) >= n_free:
+                rest.extend(self.pending[k:])
+                break
+            if self._is_quarantined(r.adapter_id):
+                finished.append(self._finalize(
+                    r, RequestStatus.FAILED, PoisonedAdapter(
+                        f"request {r.request_id}: adapter "
+                        f"{r.adapter_id!r} is quarantined",
+                        adapter_id=r.adapter_id)))
+                continue
+            if r.adapter_id not in self.store.quantized:
+                finished.append(self._finalize(
+                    r, RequestStatus.REJECTED, UnknownAdapter(
+                        f"request {r.request_id}: adapter "
+                        f"{r.adapter_id!r} is not registered in the "
+                        f"AdapterStore", adapter_id=r.adapter_id)))
+                continue
+            if tpad0 is not None and self._tpad(r) != tpad0:
+                rest.append(r)
+                continue
+            if stalled and not (self.hol_bypass
+                                and mgr.resident(r.adapter_id)):
+                rest.append(r)
+                continue
+            try:
+                slot = mgr.acquire(r.adapter_id)
+            except PoisonedAdapter as e:
+                self._quarantine(r.adapter_id)
+                finished.append(self._finalize(r, RequestStatus.FAILED, e))
+                continue
+            except HostReadError as e:
+                finished.append(self._finalize(
+                    r, RequestStatus.REJECTED, MemoryExhausted(
+                        str(e), adapter_id=r.adapter_id)))
+                continue
+            if slot is None:
+                stalled = True             # every slot pinned right now
+                rest.append(r)
+                continue
+            if tpad0 is None:
+                tpad0 = self._tpad(r)
+            group.append(r)
+        self.pending = rest
+        return group
+
     def step(self) -> List[Request]:
         """Advance the continuous scheduler by one decode step.
 
-        1. **Admit**: move pending requests into free rows (FIFO; bursts of
-           equal padded length prefill as one batch → cache-row scatter; a
+        0. **Sweep**: requests shed at submit time drain into the finished
+           list; queued requests past their TTFT/total deadline retire
+           TIMED_OUT; adapters whose pages failed integrity at fault time
+           are quarantined and their live rows retire FAILED (co-batched
+           healthy rows are untouched — per-row seg ids isolate them);
+           live rows past their total deadline retire TIMED_OUT with the
+           partial output.
+        1. **Admit**: move pending requests into free rows (FIFO with the
+           failure contract — :meth:`_select_admissions`; bursts of equal
+           padded length prefill as one batch → cache-row scatter; a
            request that finishes at admission frees its row for the next
-           pending one immediately). Each admitted request's adapter is
-           mapped to a pinned HBM slot (``memory.acquire``): residency is a
-           hit, a miss faults the page in from the host tier (usually
-           already staged by last step's prefetch), and when every slot is
-           pinned by live rows the request simply stays pending.
+           pending one immediately). When every slot is pinned by live
+           rows the request stays pending — and if *nothing* is live to
+           ever unpin (externally pinned pool), ``stall_limit`` fruitless
+           steps reject the head with MemoryExhausted so admission can
+           never deadlock.
         2. **Decode**: one step for the whole fixed-shape batch — per-row
            cache positions/validity and per-row adapter **slot** ids as SGMV
            seg ids; inactive rows run fully masked and are ignored. Before
@@ -816,48 +1118,72 @@ class MultiLoRAEngine:
            fresh buffers, so the copies overlap the in-flight decode).
         3. **Retire**: rows hitting ``max_new_tokens``/``eos_id`` free their
            batch row, unpin their adapter slot, and their request (with
-           ``output`` set) is returned.
+           ``output`` set, status DONE) is returned.
 
-        Returns the requests finished during this step, completion-ordered.
+        Returns the requests that reached a terminal state during this
+        step, completion-ordered.
         """
-        finished: List[Request] = []
+        finished: List[Request] = list(self._terminated)
+        self._terminated = []
         if not self.pending and all(r is None for r in self._rows):
             return finished
         mgr = self.memory
         mgr.refresh()                      # reconcile store mutations
+        now = time.perf_counter()
+        # queue-deadline sweep: expired waiters retire without a row
+        still: List[Request] = []
+        for r in self.pending:
+            err = self._queue_expired(r, now)
+            if err is not None:
+                finished.append(
+                    self._finalize(r, RequestStatus.TIMED_OUT, err))
+            else:
+                still.append(r)
+        self.pending = still
+        # poison sweep: the memory layer records integrity failures it
+        # detects at page-read time; DRAIN them into quarantine, skipping
+        # records whose adapter was re-registered since the failure (a
+        # fixed upload must not be re-quarantined), and evict their rows
+        # FAILED, leaving co-batched rows token-exact
+        while mgr.poisoned:
+            aid, ver = mgr.poisoned.popitem()
+            if self.store.version(aid) == ver:
+                self.quarantined[aid] = ver
+        for i in range(self.max_rows):
+            row = self._rows[i]
+            if row is None:
+                continue
+            if self._is_quarantined(row.req.adapter_id):
+                finished.append(self._retire(
+                    i, RequestStatus.FAILED, PoisonedAdapter(
+                        f"request {row.req.request_id}: adapter "
+                        f"{row.req.adapter_id!r} was quarantined "
+                        f"mid-decode", adapter_id=row.req.adapter_id)))
+                continue
+            req = row.req
+            if (req.deadline_ms is not None and req.t_submit is not None
+                    and (now - req.t_submit) * 1e3 > req.deadline_ms):
+                finished.append(self._retire(
+                    i, RequestStatus.TIMED_OUT, DeadlineExceeded(
+                        f"request {req.request_id}: total deadline "
+                        f"({req.deadline_ms:g} ms) expired mid-decode",
+                        adapter_id=req.adapter_id)))
         if self._caches is None:
             self._caches = self.model.init_cache(self.max_rows, self.capacity)
         # admit FIFO, batching the leading run of equal padded lengths into
         # one prefill; retiring-at-admission frees rows for the next group
+        admitted_any = False
         while self.pending:
             free = [i for i in range(self.max_rows) if self._rows[i] is None]
             if not free:
                 break
-            group = [self.pending[0]]
-            for r in self.pending[1:len(free)]:
-                if self._tpad(r) != self._tpad(group[0]):
-                    break
-                group.append(r)
-            for r in group:                    # validate BEFORE dequeuing so
-                if r.adapter_id not in self.store.quantized:  # pending survives
-                    raise KeyError(
-                        f"request {r.request_id}: adapter {r.adapter_id!r} "
-                        f"is not registered in the AdapterStore")
-            # adapter → pinned slot, one pin per row; shrink the group at
-            # the first request whose page cannot get a slot (every slot
-            # pinned by live rows) — it waits for a retirement
-            acquired = 0
-            for r in group:
-                if mgr.acquire(r.adapter_id) is None:
-                    break
-                acquired += 1
-            group = group[:acquired]
+            group = self._select_admissions(len(free), finished)
             if not group:
                 break
+            admitted_any = True
             # global slot ids are read AFTER the whole group's acquires: a
             # later acquire may grow a pool and shift earlier ids
             slots = [mgr.slot_of(r.adapter_id) for r in group]
-            del self.pending[:len(group)]
             rows = free[:len(group)]
             for row_idx, row in zip(rows,
                                     self._admit_group(group, rows, slots)):
@@ -865,8 +1191,25 @@ class MultiLoRAEngine:
                     finished.append(self._retire(row_idx))
         active = [i for i in range(self.max_rows) if self._rows[i] is not None]
         if not active:
+            if self.pending and not admitted_any and not finished:
+                # nothing live to ever unpin a slot (externally pinned
+                # pool): bounded patience, then shed the head so run()
+                # can never spin forever
+                self._stalled_steps += 1
+                if self._stalled_steps >= self.stall_limit:
+                    head = self.pending.pop(0)
+                    finished.append(self._finalize(
+                        head, RequestStatus.REJECTED, MemoryExhausted(
+                            f"request {head.request_id}: no HBM slot became "
+                            f"available after {self._stalled_steps} stalled "
+                            f"steps (pool fully pinned)",
+                            adapter_id=head.adapter_id)))
+                    self._stalled_steps = 0
+            else:
+                self._stalled_steps = 0
             self._prefetch_upcoming()
             return finished
+        self._stalled_steps = 0
         toks = np.zeros((self.max_rows, 1), np.int32)
         pos = np.zeros((self.max_rows,), np.int32)
         # inactive rows: valid_start == capacity masks every cache slot, so
@@ -912,18 +1255,56 @@ class MultiLoRAEngine:
     def active_rows(self) -> int:
         return sum(r is not None for r in self._rows)
 
+    def _screen_static(self, reqs: List[Request],
+                       done: List[Request]) -> List[Request]:
+        """Apply the failure contract to a static (one-shot) batch before
+        decoding: unknown adapters REJECT, quarantined adapters FAIL,
+        already-expired deadlines TIME OUT — and, because the static paths
+        read codes straight from the store (no paged-tier integrity hook),
+        each adapter's codes are integrity-screened once here; poisoned
+        ones are quarantined and their requests FAIL without touching the
+        rest of the batch."""
+        now = time.perf_counter()
+        healthy: List[Request] = []
+        for r in reqs:
+            if self._reject_now(r) is not None:
+                done.append(r)
+                continue
+            err = self._queue_expired(r, now)
+            if err is not None:
+                done.append(self._finalize(r, RequestStatus.TIMED_OUT, err))
+                continue
+            healthy.append(r)
+        for aid in sorted({r.adapter_id for r in healthy}):
+            if not self.store.check_integrity(aid):
+                self._quarantine(aid)
+        out: List[Request] = []
+        for r in healthy:
+            if self._is_quarantined(r.adapter_id):
+                done.append(self._finalize(
+                    r, RequestStatus.FAILED, PoisonedAdapter(
+                        f"request {r.request_id}: adapter "
+                        f"{r.adapter_id!r} failed the integrity screen",
+                        adapter_id=r.adapter_id)))
+            else:
+                out.append(r)
+        return out
+
     def run(self, mode: Optional[str] = None) -> List[Request]:
-        """Process all pending requests; returns them with ``output`` set
-        (continuous mode returns completion order, static modes submission
-        order)."""
+        """Process all pending requests to a terminal state; returns them
+        with ``output``/``status`` set (continuous mode returns completion
+        order, static modes submission order — screened-out failures
+        first)."""
         mode = mode or self.mode
         if mode not in ("continuous", "packed", "materialize"):
             raise ValueError(f"unknown serving mode {mode!r}")  # keep pending
         done: List[Request] = []
         if mode == "continuous":
-            while self.pending or self.active_rows:
+            while self.pending or self.active_rows or self._terminated:
                 done.extend(self.step())
             return done
+        done.extend(self._terminated)      # queue-shed before a static run
+        self._terminated = []
         if self.active_rows:
             # a static run must not strand requests mid-decode in the
             # scheduler's rows: drain them first (without admitting the
@@ -933,6 +1314,7 @@ class MultiLoRAEngine:
                 done.extend(self.step())
             self.pending = held
         reqs, self.pending = self.pending, []
+        reqs = self._screen_static(reqs, done)
         if not reqs:
             return done
         if mode == "packed":

@@ -1,0 +1,373 @@
+"""Failure contract + fault-injection harness for multi-LoRA serving.
+
+PRs 1-5 built a serving engine that assumes a fault-free world: every
+adapter upload is finite, every host-tier page read returns, every slot
+pool eventually frees a slot. This module is the *failure contract* the
+engine and the paged adapter memory now honor (``docs/robustness.md``):
+
+* :class:`RequestStatus` — the request lifecycle. Every request ends in
+  exactly one terminal state (DONE / REJECTED / TIMED_OUT / FAILED), and a
+  terminal request always carries the tokens it produced so far plus, for
+  non-DONE states, a structured :class:`RequestError`.
+* :class:`RequestError` hierarchy — typed, machine-readable failure causes:
+  :class:`UnknownAdapter`, :class:`PoisonedAdapter`,
+  :class:`DeadlineExceeded`, :class:`QueueFull`, :class:`MemoryExhausted`.
+* :class:`AdapterValidationError` — onboarding-side screening failures
+  (NaN/Inf weights, inconsistent LoRA shapes, injected upload errors);
+  raised by ``AdapterStore.register`` before a bad adapter can enter the
+  registry.
+* :class:`HostTransport` — the pluggable host-tier page-read path with
+  timeout, bounded exponential-backoff retry, and fault injection. The
+  default (no :class:`FaultPlan`) is a straight pass-through.
+* :class:`FaultPlan` — seeded, **deterministic** injection of host-read
+  latency, transient/permanent read failures, page corruption, and
+  onboarding errors. Determinism: every decision is drawn from an RNG
+  keyed by ``(seed, adapter_id, op, event_index)``, so a replay with the
+  same plan and the same call sequence injects the same faults.
+
+Nothing here imports the engine or the memory manager — both import this
+module, keeping the taxonomy dependency-free for RPC layers to reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import time
+from typing import Callable, Dict, FrozenSet, Optional, Tuple
+
+import numpy as np
+
+
+class RequestStatus(str, enum.Enum):
+    """Request lifecycle states (``docs/robustness.md``).
+
+    PENDING → RUNNING → DONE is the happy path; REJECTED (never ran),
+    TIMED_OUT (deadline hit while queued or mid-decode) and FAILED
+    (adapter poisoned / unrecoverable memory fault) are the terminal
+    failure states. Terminal requests always have ``output`` set (possibly
+    empty) and, except DONE, a structured ``error``.
+    """
+
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    REJECTED = "rejected"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (RequestStatus.PENDING, RequestStatus.RUNNING)
+
+
+class RequestError(Exception):
+    """Base of the structured per-request error taxonomy. ``str(err)`` is
+    human-readable; ``err.kind`` is the stable machine-readable tag."""
+
+    kind = "error"
+
+    def __init__(self, message: str, adapter_id: Optional[str] = None):
+        super().__init__(message)
+        self.adapter_id = adapter_id
+
+
+class UnknownAdapter(RequestError):
+    """The request names an adapter id that is not (or no longer)
+    registered in the AdapterStore."""
+
+    kind = "unknown_adapter"
+
+
+class PoisonedAdapter(RequestError):
+    """The adapter's codes failed an integrity check (NaN/Inf scales —
+    corrupt upload, corrupt host-tier read). The adapter is quarantined;
+    its requests fail without touching co-batched healthy rows."""
+
+    kind = "poisoned_adapter"
+
+
+class DeadlineExceeded(RequestError):
+    """The request's wall-clock budget (TTFT or total) expired — while
+    queued (no tokens) or mid-decode (partial output is kept)."""
+
+    kind = "deadline_exceeded"
+
+
+class QueueFull(RequestError):
+    """Backpressure: the bounded pending queue was full at submit time
+    (``reject`` policy rejects the new arrival, ``shed_oldest`` rejects
+    the oldest queued request instead)."""
+
+    kind = "queue_full"
+
+
+class MemoryExhausted(RequestError):
+    """The paged adapter memory could not produce a usable page: every
+    slot pinned with no prospect of progress, or the host tier failed
+    persistently with no stale resident page to degrade to."""
+
+    kind = "memory_exhausted"
+
+
+class AdapterValidationError(Exception):
+    """Onboarding screen failure: the uploaded adapter tree (or an
+    injected onboarding fault) is rejected before registration."""
+
+
+class HostReadError(Exception):
+    """A host-tier page read failed after exhausting its retry budget.
+    Internal to the memory layer — the engine surfaces it to callers as
+    :class:`MemoryExhausted` when no degradation rung applies."""
+
+    def __init__(self, adapter_id: str, attempts: int, cause: str = ""):
+        super().__init__(
+            f"host-tier read for adapter {adapter_id!r} failed after "
+            f"{attempts} attempt(s){': ' + cause if cause else ''}")
+        self.adapter_id = adapter_id
+        self.attempts = attempts
+
+
+def _stable_rng(seed: int, *key) -> np.random.Generator:
+    """An RNG keyed by (seed, *key) — stable across processes (md5, not
+    Python's salted ``hash``) so FaultPlans replay identically."""
+    digest = hashlib.md5(
+        ("|".join(str(k) for k in (seed,) + key)).encode()).digest()
+    return np.random.default_rng(int.from_bytes(digest[:8], "little"))
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded deterministic fault injection for the serving stack.
+
+    All knobs default to "no faults", so an engine constructed with a
+    default plan behaves identically to one constructed with ``None``.
+
+    Host-read faults (consumed by :class:`HostTransport` per *attempt*):
+
+    * ``read_latency_s`` with probability ``read_latency_prob`` — injected
+      sleep before the read (a latency spike; reads slower than the
+      transport's ``timeout_s`` count as failed attempts).
+    * ``transient_fail_prob`` — each attempt independently fails; retries
+      re-draw, so a bounded retry budget usually recovers.
+    * ``fail_adapters`` — these ids fail **permanently** (every attempt).
+    * ``fail_reads_from`` — id → k: the id's k-th and later read *events*
+      fail permanently (an adapter whose host copy goes bad mid-serve —
+      the stale-resident-page degradation rung).
+
+    Page corruption (applied by the memory layer after a successful read):
+
+    * ``corrupt_adapters`` — these ids' pages come back with NaN scales,
+      tripping the integrity check → quarantine.
+
+    Onboarding faults (applied by ``AdapterStore.register``):
+
+    * ``onboard_fail`` — registering these ids raises
+      :class:`AdapterValidationError`.
+
+    Every probabilistic draw is keyed by ``(seed, adapter_id, op,
+    event_index)`` where ``event_index`` is a per-(id, op) call counter, so
+    two runs issuing the same call sequence see the same faults.
+    """
+
+    seed: int = 0
+    read_latency_s: float = 0.0
+    read_latency_prob: float = 0.0
+    transient_fail_prob: float = 0.0
+    fail_adapters: FrozenSet[str] = frozenset()
+    fail_reads_from: Optional[Dict[str, int]] = None
+    corrupt_adapters: FrozenSet[str] = frozenset()
+    onboard_fail: FrozenSet[str] = frozenset()
+
+    def __post_init__(self):
+        self.fail_adapters = frozenset(self.fail_adapters)
+        self.corrupt_adapters = frozenset(self.corrupt_adapters)
+        self.onboard_fail = frozenset(self.onboard_fail)
+        self._counters: Dict[Tuple[str, str], int] = {}
+        # injected-event log: op -> count (reported by the chaos bench)
+        self.injected: Dict[str, int] = {}
+
+    def _event(self, adapter_id: str, op: str) -> int:
+        n = self._counters.get((adapter_id, op), 0)
+        self._counters[(adapter_id, op)] = n + 1
+        return n
+
+    def _note(self, op: str):
+        self.injected[op] = self.injected.get(op, 0) + 1
+
+    # ----- host reads -----
+
+    def host_read(self, adapter_id: str, attempt: int) -> Tuple[bool, float]:
+        """Outcome of one read attempt: ``(ok, injected_latency_s)``.
+        Called by the transport once per attempt (retries included)."""
+        event = self._event(adapter_id, "read")
+        latency = 0.0
+        if self.read_latency_prob > 0.0:
+            rng = _stable_rng(self.seed, adapter_id, "latency", event)
+            if rng.random() < self.read_latency_prob:
+                latency = self.read_latency_s
+                self._note("read_latency")
+        if adapter_id in self.fail_adapters:
+            self._note("read_fail_permanent")
+            return False, latency
+        start = (self.fail_reads_from or {}).get(adapter_id)
+        if start is not None and event >= start:
+            self._note("read_fail_permanent")
+            return False, latency
+        if self.transient_fail_prob > 0.0:
+            rng = _stable_rng(self.seed, adapter_id, "transient", event,
+                              attempt)
+            if rng.random() < self.transient_fail_prob:
+                self._note("read_fail_transient")
+                return False, latency
+        return True, latency
+
+    # ----- page corruption -----
+
+    def corrupt_page(self, adapter_id: str, arrays):
+        """Corrupt a just-read page's float fields (NaN scales) for ids in
+        ``corrupt_adapters``; identity otherwise. ``arrays`` is the host
+        page's ``{path: {field: np.ndarray}}`` mapping."""
+        if adapter_id not in self.corrupt_adapters:
+            return arrays
+        self._note("page_corruption")
+        out = {}
+        for path, fields in arrays.items():
+            out[path] = dict(fields)
+            for name, arr in fields.items():
+                if np.issubdtype(arr.dtype, np.floating):
+                    bad = arr.copy()
+                    bad.flat[0] = np.nan
+                    out[path][name] = bad
+                    break                      # one NaN per path is plenty
+        return out
+
+    # ----- onboarding -----
+
+    def check_onboard(self, adapter_id: str):
+        """Raise the injected onboarding error for ids in
+        ``onboard_fail`` (called by ``AdapterStore.register``)."""
+        if adapter_id in self.onboard_fail:
+            self._note("onboard_fail")
+            raise AdapterValidationError(
+                f"injected onboarding failure for adapter {adapter_id!r}")
+
+
+def named_plan(name: str, **overrides) -> Optional[FaultPlan]:
+    """Named FaultPlans for ``launch/serve.py --inject`` and the chaos
+    benchmark. ``none`` → ``None`` (no injection layer at all)."""
+    presets: Dict[str, dict] = {
+        "none": None,
+        "latency": dict(read_latency_s=0.005, read_latency_prob=0.5),
+        "transient": dict(transient_fail_prob=0.4),
+        "poison": dict(corrupt_adapters=frozenset({"user_1"})),
+        "storm": dict(read_latency_s=0.003, read_latency_prob=0.3,
+                      transient_fail_prob=0.3,
+                      corrupt_adapters=frozenset({"user_1"})),
+    }
+    if name not in presets:
+        raise ValueError(f"unknown fault plan {name!r}; "
+                         f"choose from {sorted(presets)}")
+    if presets[name] is None:
+        return None
+    return FaultPlan(**{**presets[name], **overrides})
+
+
+class HostTransport:
+    """The host-tier page-read path: timeout + bounded exponential-backoff
+    retry around an in-process page builder, with :class:`FaultPlan`
+    injection. Swap in a subclass to back the host tier with a real
+    store (disk tier, RPC parameter server) — the memory manager only
+    calls :meth:`read`.
+
+    With ``faults=None`` a read is exactly one ``builder()`` call — no
+    sleeps, no overhead. Real exceptions raised by the builder propagate
+    immediately (they are bugs, not transport weather); only injected
+    fault outcomes consume the retry budget.
+    """
+
+    def __init__(self, faults: Optional[FaultPlan] = None,
+                 timeout_s: float = 0.25, max_retries: int = 3,
+                 backoff_s: float = 1e-3, backoff_mult: float = 2.0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.faults = faults
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_mult = backoff_mult
+        self.sleep = sleep
+        self.reads = 0
+        self.retries = 0
+        self.timeouts = 0
+        self.failures = 0
+
+    def read(self, adapter_id: str, builder):
+        """Return ``builder()`` under the retry/timeout policy. Raises
+        :class:`HostReadError` once the retry budget is exhausted."""
+        self.reads += 1
+        if self.faults is None:
+            return builder()
+        delay = self.backoff_s
+        cause = ""
+        for attempt in range(self.max_retries + 1):
+            ok, latency = self.faults.host_read(adapter_id, attempt)
+            if latency > 0.0:
+                if latency > self.timeout_s:
+                    ok, cause = False, "timeout"
+                    self.timeouts += 1
+                else:
+                    self.sleep(latency)
+            if ok:
+                return builder()
+            if attempt < self.max_retries:
+                self.retries += 1
+                self.sleep(delay)
+                delay *= self.backoff_mult
+        self.failures += 1
+        raise HostReadError(adapter_id, self.max_retries + 1, cause)
+
+    def stats(self) -> Dict[str, int]:
+        return {"reads": self.reads, "retries": self.retries,
+                "timeouts": self.timeouts, "failures": self.failures}
+
+
+def validate_lora_tree(lora_tree, adapter_id: str = "?"):
+    """Onboarding screen: every {'a','b'} LoRA linear must be finite and
+    shape-consistent (matching rank between the two factors). Raises
+    :class:`AdapterValidationError` — called by ``AdapterStore.register``
+    before quantization so a poisoned upload never enters the registry."""
+    from repro.serving.engine import iter_lora_linears
+
+    leaves = iter_lora_linears(lora_tree)
+    if not leaves:
+        raise AdapterValidationError(
+            f"adapter {adapter_id!r}: upload contains no {{'a','b'}} LoRA "
+            f"linears")
+    for path, leaf in leaves:
+        a, b = np.asarray(leaf["a"]), np.asarray(leaf["b"])
+        if a.ndim < 2 or b.ndim < 2:
+            raise AdapterValidationError(
+                f"adapter {adapter_id!r} at {path}: LoRA factors must be "
+                f"at least 2-D, got a{a.shape} b{b.shape}")
+        if a.shape[-2] != b.shape[-1]:
+            raise AdapterValidationError(
+                f"adapter {adapter_id!r} at {path}: rank mismatch between "
+                f"a{a.shape} (rank {a.shape[-2]}) and b{b.shape} "
+                f"(rank {b.shape[-1]})")
+        if not np.isfinite(a).all() or not np.isfinite(b).all():
+            raise AdapterValidationError(
+                f"adapter {adapter_id!r} at {path}: non-finite values in "
+                f"upload (NaN/Inf)")
+
+
+def page_arrays_finite(arrays) -> bool:
+    """Integrity check for a host page's ``{path: {field: np.ndarray}}``:
+    every float field (scales/zeros) must be finite. Integer code words
+    cannot encode NaN, so the float side-channel is where poison shows."""
+    for fields in arrays.values():
+        for arr in fields.values():
+            if (np.issubdtype(arr.dtype, np.floating)
+                    and not np.isfinite(arr).all()):
+                return False
+    return True

@@ -56,6 +56,13 @@ from repro.kernels import PackedLoRABatch, PackedLoRABuckets, pack_adapter_layer
 from repro.kernels.quant_matmul.ops import (
     _PACKED_ARRAY_FIELDS as _ARRAY_FIELDS,
 )
+from repro.serving.faults import (
+    FaultPlan,
+    HostReadError,
+    HostTransport,
+    PoisonedAdapter,
+    page_arrays_finite,
+)
 
 # page meta = everything that isn't a packed array, the late-attached seg,
 # or a per-view knob — derived from the dataclass so a new field added to
@@ -143,7 +150,10 @@ class AdapterMemoryManager:
     """
 
     def __init__(self, store, like_tree, num_slots: Optional[int] = None,
-                 tile_t: int = 8, interpret: bool = True):
+                 tile_t: int = 8, interpret: bool = True,
+                 transport: Optional[HostTransport] = None,
+                 faults: Optional[FaultPlan] = None,
+                 verify_pages: bool = True):
         if num_slots is not None and num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.store = store
@@ -151,6 +161,10 @@ class AdapterMemoryManager:
         self.requested_slots = num_slots
         self.tile_t = tile_t
         self.interpret = interpret
+        self.faults = faults
+        self.transport = (transport if transport is not None
+                          else HostTransport(faults=faults))
+        self.verify_pages = verify_pages
 
         self._leaf_info: Optional[List[Tuple[str, int, int]]] = None
         self._host: Dict[str, _HostPage] = {}
@@ -158,12 +172,23 @@ class AdapterMemoryManager:
             collections.OrderedDict())
         self._page_bytes_by_sig: Dict[tuple, int] = {}
         self._meta_by_sig: Dict[tuple, Dict[str, Dict[str, Any]]] = {}
+        # per-sig (tail shape, dtype) of every leaf field: lets pools
+        # resize after their last host page is gone (deferred unregister)
+        self._ref_by_sig: Dict[tuple, Dict[str, Dict[str, Tuple[tuple, Any]]]] = {}
 
         self._where: Dict[str, Tuple[tuple, int]] = {}   # aid -> (sig, local)
         self._slot_version: Dict[str, int] = {}
         self._pins: Dict[str, int] = {}
         self._reserved: Set[str] = set()
         self._lru: "collections.OrderedDict[str, None]" = collections.OrderedDict()
+        # deferred unregister: ids whose store entry is gone but whose slot
+        # is pinned by live rows — reaped on the last unpin
+        self._dead: Set[str] = set()
+        # ids whose page failed the integrity check, keyed to the store
+        # version that failed — the engine drains this into its quarantine
+        # set each step (version-keyed so a fixed re-upload is not
+        # re-quarantined by a stale record)
+        self.poisoned: Dict[str, Optional[int]] = {}
 
         self._tree = None                  # cached serving tree (dirty=None)
         self._seen_mutations = None
@@ -171,6 +196,7 @@ class AdapterMemoryManager:
         self.misses = 0
         self.swap_ins = 0
         self.evictions = 0
+        self.stale_serves = 0
 
     # ----- layout -----
 
@@ -198,7 +224,15 @@ class AdapterMemoryManager:
 
     def _host_page(self, adapter_id: str) -> _HostPage:
         """Host-tier page for one adapter, (re)built from the store's
-        quantized entries when absent or stale (weight OR recipe change)."""
+        quantized entries when absent or stale (weight OR recipe change).
+
+        The build runs through the pluggable :class:`HostTransport`
+        (timeout + bounded-backoff retry + fault injection) and the result
+        is integrity-checked before it can reach a slot: a page with
+        non-finite scales raises :class:`PoisonedAdapter` (and is recorded
+        in :attr:`poisoned` for the engine's quarantine sweep), a
+        persistently failing read raises :class:`HostReadError` for the
+        caller's degradation ladder."""
         version = self.store.version(adapter_id)
         if version is None:
             raise KeyError(f"adapter {adapter_id!r} is not registered")
@@ -207,25 +241,44 @@ class AdapterMemoryManager:
             return page
         qa = self.store.quantized[adapter_id]
         sig = self._sig_of(adapter_id)
-        arrays: Dict[str, Dict[str, np.ndarray]] = {}
-        meta: Dict[str, Dict[str, Any]] = {}
-        nbytes = 0
-        for path, n_layers, fold in self._leaves():
-            pb = pack_adapter_layers(qa.entries[path], interpret=self.interpret,
-                                     fold=fold)
-            meta[path] = {f: getattr(pb, f) for f in _META_FIELDS}
-            fields = {}
-            for f in _ARRAY_FIELDS:
-                arr = np.asarray(getattr(pb, f))
-                # normalize to an explicit fold axis: (L, fold, Rp, ·)
-                fields[f] = arr.reshape((n_layers, fold) + arr.shape[-2:])
-                nbytes += fields[f].nbytes
-            arrays[path] = fields
+
+        def build():
+            arrays: Dict[str, Dict[str, np.ndarray]] = {}
+            meta: Dict[str, Dict[str, Any]] = {}
+            nbytes = 0
+            for path, n_layers, fold in self._leaves():
+                pb = pack_adapter_layers(qa.entries[path],
+                                         interpret=self.interpret, fold=fold)
+                meta[path] = {f: getattr(pb, f) for f in _META_FIELDS}
+                fields = {}
+                for f in _ARRAY_FIELDS:
+                    arr = np.asarray(getattr(pb, f))
+                    # normalize to an explicit fold axis: (L, fold, Rp, ·)
+                    fields[f] = arr.reshape((n_layers, fold) + arr.shape[-2:])
+                    nbytes += fields[f].nbytes
+                arrays[path] = fields
+            return arrays, meta, nbytes
+
+        arrays, meta, nbytes = self.transport.read(adapter_id, build)
+        if self.faults is not None:        # corruption models bad bytes at
+            arrays = self.faults.corrupt_page(adapter_id, arrays)  # rest
+        # layout facts are value-independent: record them even for a page
+        # that fails the integrity check below, so pool geometry survives
+        self._page_bytes_by_sig.setdefault(sig, nbytes)
+        self._meta_by_sig.setdefault(sig, meta)
+        self._ref_by_sig.setdefault(sig, {
+            path: {f: (arr.shape[-2:], arr.dtype)
+                   for f, arr in fields.items()}
+            for path, fields in arrays.items()})
+        if self.verify_pages and not page_arrays_finite(arrays):
+            self.poisoned[adapter_id] = version
+            raise PoisonedAdapter(
+                f"adapter {adapter_id!r}: page integrity check failed "
+                f"(non-finite scales)", adapter_id)
+        self.poisoned.pop(adapter_id, None)
         page = _HostPage(arrays=arrays, version=version, nbytes=nbytes,
                          sig=sig)
         self._host[adapter_id] = page
-        self._page_bytes_by_sig.setdefault(sig, nbytes)
-        self._meta_by_sig.setdefault(sig, meta)
         return page
 
     def page_bytes_of(self, adapter_id: str) -> int:
@@ -237,12 +290,22 @@ class AdapterMemoryManager:
 
     def _sig_page_bytes(self, sig: tuple) -> int:
         """Page bytes for a signature, probing any registered adapter of
-        that signature if not yet known."""
+        that signature if not yet known. A probe that fails its read or
+        integrity check must not poison an unrelated caller — try the next
+        adapter of the signature instead."""
         if sig not in self._page_bytes_by_sig:
-            for aid in self.store.quantized:
-                if self._sig_of(aid) == sig:
+            for aid in list(self.store.quantized):
+                if self._sig_of(aid) != sig:
+                    continue
+                try:
                     self._host_page(aid)
-                    break
+                except (HostReadError, PoisonedAdapter):
+                    # layout facts may have been recorded anyway (poison);
+                    # otherwise probe another adapter of the signature
+                    if sig in self._page_bytes_by_sig:
+                        break
+                    continue
+                break
         if sig not in self._page_bytes_by_sig:
             raise RuntimeError(f"no adapter of signature {sig} registered: "
                                "page size unknown")
@@ -338,20 +401,19 @@ class AdapterMemoryManager:
             pool.owners = []
             self._tree = None
             return
-        ref_page = None
-        for aid, hp in self._host.items():
-            if hp.sig == pool.sig:
-                ref_page = hp
-                break
-        assert ref_page is not None, "pool resize before any host page"
+        # field shapes come from the per-sig template recorded at the first
+        # host-page build — NOT from a live host page, which may be gone
+        # (deferred unregister keeps pinned slots after their host page)
+        ref = self._ref_by_sig.get(pool.sig)
+        assert ref is not None, "pool resize before any host page"
         old, old_cap = pool.arrays, pool.capacity
         arrays: Dict[str, Dict[str, jax.Array]] = {}
         for path, n_layers, fold in self._leaves():
-            ref = ref_page.arrays[path]
             fields = {}
             for f in _ARRAY_FIELDS:
-                shape = ((n_layers, capacity * fold) + ref[f].shape[-2:])
-                z = jnp.zeros(shape, ref[f].dtype)
+                tail, dtype = ref[path][f]
+                shape = ((n_layers, capacity * fold) + tail)
+                z = jnp.zeros(shape, dtype)
                 if old is not None and old_cap:
                     keep = min(old_cap, capacity) * fold
                     z = z.at[:, :keep].set(old[path][f][:, :keep])
@@ -423,6 +485,13 @@ class AdapterMemoryManager:
         n = self._pins.get(adapter_id, 0) - 1
         if n <= 0:
             self._pins.pop(adapter_id, None)
+            if adapter_id in self._dead:
+                # deferred unregister: the last live row just retired —
+                # reap the slot and host page the store dropped earlier
+                self._dead.discard(adapter_id)
+                if adapter_id in self._where:
+                    self._free_slot(adapter_id)
+                self._host.pop(adapter_id, None)
         else:
             self._pins[adapter_id] = n
 
@@ -520,7 +589,14 @@ class AdapterMemoryManager:
             migrated.append((owner, hole))
             cap -= 1
         for owner, hole in migrated:       # data follows the owner table
-            self._swap_in(owner, pool.sig, hole, migrate=True)
+            try:
+                self._swap_in(owner, pool.sig, hole, migrate=True)
+            except (HostReadError, PoisonedAdapter):
+                # the migrating page cannot be re-read: drop it (it is
+                # unpinned) instead of leaving stale bytes at the new slot;
+                # a later acquire re-faults it and surfaces the error
+                self._free_slot(owner)
+                self.evictions += 1
         if cap != pool.capacity:
             self._resize_pool(pool, cap)
 
@@ -557,6 +633,15 @@ class AdapterMemoryManager:
         (everything pinned/reserved and the ledger is dry) — the caller
         leaves the request pending and retries next step.
 
+        Failure contract (``docs/robustness.md``): a swap-in whose host
+        read fails persistently (transport retry budget exhausted) falls
+        back to a **stale-but-valid resident page** of the same adapter
+        when one exists (counted in ``stale_serves``); otherwise
+        :class:`HostReadError` propagates for the engine to reject the
+        request. A page failing its integrity check raises
+        :class:`PoisonedAdapter` (quarantine path) — never a stale serve,
+        because poison is a property of the codes, not of the transport.
+
         Note the returned global id is only stable until another pool
         grows; the engine re-reads :meth:`slot_of` when building each
         step's seg ids.
@@ -567,8 +652,10 @@ class AdapterMemoryManager:
             local = self._where[adapter_id][1]
         else:
             loc = self._where.get(adapter_id)
-            if loc is not None and loc[0] == sig:
-                local = loc[1]                 # resident but stale codes:
+            stale_local = (loc[1] if loc is not None and loc[0] == sig
+                           else None)
+            if stale_local is not None:
+                local = stale_local            # resident but stale codes:
             else:                              # reload in place
                 if loc is not None:            # recipe changed pools
                     self._free_slot(adapter_id)
@@ -576,7 +663,14 @@ class AdapterMemoryManager:
                 if local is None:
                     return None                # retried next step — not
             self.misses += 1                   # charged as a miss
-            self._swap_in(adapter_id, sig, local)
+            try:
+                self._swap_in(adapter_id, sig, local)
+            except HostReadError:
+                if stale_local is None:
+                    raise
+                # degradation rung 1: the slot still holds the last good
+                # version of this adapter's codes — serve those
+                self.stale_serves += 1
         self._lru[adapter_id] = None
         self._lru.move_to_end(adapter_id)
         self._reserved.discard(adapter_id)
@@ -610,8 +704,11 @@ class AdapterMemoryManager:
                     slot = self._find_slot(sig)
                     if slot is None:
                         continue
-                self._swap_in(aid, sig, slot)
-            self._lru[aid] = None
+                try:
+                    self._swap_in(aid, sig, slot)
+                except (HostReadError, PoisonedAdapter):
+                    continue       # prefetch is opportunistic: admission's
+            self._lru[aid] = None  # acquire surfaces the error properly
             self._lru.move_to_end(aid)
             reserved.add(aid)
         self._reserved = reserved
@@ -636,16 +733,36 @@ class AdapterMemoryManager:
                 self._host.pop(aid, None)
                 if not self.pinned(aid):
                     self._free_slot(aid)
+                    self._dead.discard(aid)
+                else:
+                    # deferred unregister: live rows keep reading the
+                    # pinned page; :meth:`unpin` reaps it on the last row's
+                    # retirement (never a dangling slot, never a freed page
+                    # under a live row)
+                    self._dead.add(aid)
             elif version != self._slot_version.get(aid):
+                self._dead.discard(aid)        # re-registered while dying
                 sig_now = self._sig_of(aid)
                 sig_was = self._where[aid][0]
                 if not self.pinned(aid):
                     self._free_slot(aid)
                 elif sig_now == sig_was:
-                    self._swap_in(aid, sig_was, self._where[aid][1])
+                    try:
+                        self._swap_in(aid, sig_was, self._where[aid][1])
+                    except (HostReadError, PoisonedAdapter):
+                        # keep serving the pinned stale page; acquire /
+                        # the engine's poison sweep handle the rest
+                        self.stale_serves += 1
                 else:
-                    # pinned page whose recipe moved pools: claim a slot in
-                    # the new pool, then release the old one
+                    # pinned page whose recipe moved pools: read the new
+                    # page FIRST (a failed read must leave the old pool
+                    # placement serving), then claim a slot in the new
+                    # pool and release the old one
+                    try:
+                        self._host_page(aid)
+                    except (HostReadError, PoisonedAdapter):
+                        self.stale_serves += 1
+                        continue
                     local = self._find_slot(sig_now)
                     old_sig, old_local = self._where[aid]
                     if local is None:
@@ -729,6 +846,7 @@ class AdapterMemoryManager:
 
     def stats(self) -> Dict[str, float]:
         total = self.hits + self.misses
+        t = self.transport.stats()
         return {
             "slots": sum(p.capacity for p in self._pools.values()),
             "pools": len(self._pools),
@@ -739,6 +857,12 @@ class AdapterMemoryManager:
             "hit_rate": self.hits / total if total else 1.0,
             "swap_ins": self.swap_ins,
             "evictions": self.evictions,
+            "stale_serves": self.stale_serves,
+            "dead": len(self._dead),
+            "poisoned": len(self.poisoned),
+            "host_reads": t["reads"],
+            "host_read_retries": t["retries"],
+            "host_read_failures": t["failures"],
             "hbm_slot_mb": self.hbm_bytes() / 1e6,
             "host_tier_mb": self.host_bytes() / 1e6,
         }

@@ -1,0 +1,518 @@
+"""Fault-tolerant serving (serving/faults.py + the engine/memory failure
+contract): request lifecycle, deadlines, backpressure, adapter quarantine,
+deferred unregister, host-tier retry/degradation, and the seeded
+fault-injection harness. ``docs/robustness.md`` is the prose version."""
+
+import math
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_cfg
+from repro.core import LoRAQuantConfig
+from repro.launch.serve import random_trained_lora
+from repro.models import build_model
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.faults import (
+    AdapterValidationError,
+    DeadlineExceeded,
+    FaultPlan,
+    HostReadError,
+    HostTransport,
+    MemoryExhausted,
+    PoisonedAdapter,
+    QueueFull,
+    RequestStatus,
+    UnknownAdapter,
+    named_plan,
+)
+from repro.serving.memory import AdapterMemoryManager
+
+N_ADAPTERS = 4
+
+
+def _aid(i: int) -> str:
+    return f"u{i}"
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = smoke_cfg("llama3.2-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    trees = {_aid(i): random_trained_lora(params["lora"],
+                                          jax.random.PRNGKey(200 + i),
+                                          scale=0.05)
+             for i in range(N_ADAPTERS)}
+    store.register_many(trees)
+    return cfg, model, params, store
+
+
+def _requests(cfg, adapter_seq, seed=0, max_new=2, plen=6, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(request_id=i, adapter_id=aid,
+                    prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+                    max_new_tokens=max_new, **kw)
+            for i, aid in enumerate(adapter_seq)]
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("cache_capacity", 32)
+    kw.setdefault("max_rows", 4)
+    return MultiLoRAEngine(model, params, store, **kw)
+
+
+def _poison_store(src_store, params, bad="u1", n=N_ADAPTERS):
+    """A store reusing the module fixture's quantized adapters, with one
+    adapter's packed scales NaN-poisoned post-registration (models a
+    corrupt at-rest copy that submit-time screening could not catch)."""
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(n):
+        store.register_quantized(_aid(i), src_store.quantized[_aid(i)])
+    if bad is None:
+        return store
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+    qa = store.quantized[bad]
+    path = next(iter(qa.entries))
+    q0 = qa.entries[path][0]
+    hi = q0.b_high
+    bad_hi = dc.replace(hi, scale=jnp.full(np.shape(hi.scale), np.nan,
+                                           hi.scale.dtype))
+    entries = dict(qa.entries)
+    entries[path] = ([dc.replace(q0, b_high=bad_hi)]
+                     + list(qa.entries[path][1:]))
+    store.register_quantized(bad, dc.replace(qa, entries=entries))
+    return store
+
+
+# ----- satellite: unknown adapter at submit -----
+
+
+def test_submit_unknown_adapter_rejected(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store)
+    req = _requests(cfg, ["nobody"])[0]
+    out = eng.submit(req)
+    assert out is req
+    assert req.status is RequestStatus.REJECTED and req.status.terminal
+    assert isinstance(req.error, UnknownAdapter)
+    assert req.error.kind == "unknown_adapter"
+    assert req.error.adapter_id == "nobody"
+    assert req.output is not None and req.output.size == 0
+    assert not eng.pending                       # never enqueued
+    assert eng.step() == []                      # engine is unperturbed
+
+
+# ----- satellite: unregister mid-decode (deferred reap) -----
+
+
+def test_unregister_mid_decode_deferred_reap(served):
+    """Unregistering an adapter whose row is live must keep the pinned
+    page serving (token-identical to a solo run) and reap slot + host
+    page on the last unpin — never a dangling slot under a live row."""
+    cfg, model, params, store0 = served
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(2):
+        store.register_quantized(_aid(i), store0.quantized[_aid(i)])
+    solo_eng = _engine(model, params, store)
+    solo = solo_eng.submit(_requests(cfg, [_aid(0)], seed=3, max_new=6)[0])
+    solo_eng.run()
+
+    eng = _engine(model, params, store, hbm_slots=2)
+    req = _requests(cfg, [_aid(0)], seed=3, max_new=6)[0]
+    eng.submit(req)
+    eng.step()                                   # admitted, page pinned
+    assert eng.memory.pinned(_aid(0))
+    store.unregister(_aid(0))
+    done = []
+    while eng.pending or eng.active_rows:
+        done += eng.step()
+    assert [r.request_id for r in done] == [req.request_id]
+    assert req.status is RequestStatus.DONE
+    np.testing.assert_array_equal(req.output, solo.output)
+    # reaped on retirement: slot freed, host page gone, not resident
+    mem = eng.memory
+    assert not mem.resident(_aid(0)) and _aid(0) not in mem._host
+    assert not mem.pinned(_aid(0)) and mem.stats()["dead"] == 0
+    # and a NEW request for the dead id is rejected at submit
+    rej = eng.submit(_requests(cfg, [_aid(0)], seed=4)[0])
+    assert rej.status is RequestStatus.REJECTED
+    assert isinstance(rej.error, UnknownAdapter)
+
+
+# ----- onboarding screens -----
+
+
+def test_register_screens_nan_and_shape(served):
+    cfg, model, params, store0 = served
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    good = random_trained_lora(params["lora"], jax.random.PRNGKey(9),
+                               scale=0.05)
+    bad_nan = jax.tree_util.tree_map(lambda x: np.array(x), good)
+    leaf = next(iter(jax.tree_util.tree_leaves(bad_nan)))
+    leaf.flat[0] = np.nan
+    with pytest.raises(AdapterValidationError, match="non-finite"):
+        store.register("bad", bad_nan)
+    assert "bad" not in store.quantized
+    with pytest.raises(AdapterValidationError, match="no .* LoRA"):
+        store.register("empty", {"not_lora": 1})
+    # injected onboarding faults reject too
+    store_f = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0),
+                           faults=FaultPlan(onboard_fail=frozenset({"u7"})))
+    with pytest.raises(AdapterValidationError, match="injected"):
+        store_f.register("u7", good)
+    # register_many(on_error="skip") quarantines the reject, keeps the rest
+    out = store.register_many({"ok": good, "bad": bad_nan},
+                              on_error="skip")
+    assert set(out) == {"ok"} and "ok" in store.quantized
+    assert "bad" in store.onboard_errors
+
+
+# ----- deadlines -----
+
+
+def test_queue_ttft_deadline_times_out(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store)
+    req = _requests(cfg, [_aid(0)], ttft_deadline_ms=0.0)[0]
+    eng.submit(req)
+    assert req.status is RequestStatus.PENDING
+    time.sleep(0.002)
+    done = eng.step()
+    assert done == [req]
+    assert req.status is RequestStatus.TIMED_OUT
+    assert isinstance(req.error, DeadlineExceeded)
+    assert req.output.size == 0                  # never produced a token
+
+
+def test_total_deadline_mid_decode_keeps_partial_output(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store)
+    req = _requests(cfg, [_aid(0)], max_new=64)[0]
+    eng.submit(req)
+    eng.step()                                   # prefill: 1 token emitted
+    assert req.status is RequestStatus.RUNNING
+    req.deadline_ms = 0.0                        # expires immediately
+    done = eng.step()
+    assert done == [req]
+    assert req.status is RequestStatus.TIMED_OUT
+    assert isinstance(req.error, DeadlineExceeded)
+    assert 1 <= req.output.size < 64             # partial output kept
+    assert not eng.memory.pinned(_aid(0))        # row fully retired
+
+
+def test_default_deadline_applied_at_submit(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store, default_deadline_ms=1e6)
+    req = eng.submit(_requests(cfg, [_aid(0)])[0])
+    assert req.deadline_ms == 1e6
+
+
+# ----- backpressure -----
+
+
+def test_queue_limit_reject_policy(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store, queue_limit=2)
+    reqs = _requests(cfg, [_aid(0), _aid(1), _aid(2)])
+    assert eng.submit(reqs[0]).status is RequestStatus.PENDING
+    assert eng.submit(reqs[1]).status is RequestStatus.PENDING
+    third = eng.submit(reqs[2])
+    assert third.status is RequestStatus.REJECTED
+    assert isinstance(third.error, QueueFull)
+    assert [r.request_id for r in eng.pending] == [0, 1]
+    done = eng.run()                             # survivors still complete
+    assert {r.request_id for r in done} == {0, 1}
+    assert all(r.status is RequestStatus.DONE for r in done)
+
+
+def test_queue_limit_shed_oldest_policy(served):
+    cfg, model, params, store = served
+    eng = _engine(model, params, store, queue_limit=2,
+                  queue_policy="shed_oldest")
+    reqs = _requests(cfg, [_aid(0), _aid(1), _aid(2)])
+    eng.submit(reqs[0]), eng.submit(reqs[1])
+    assert eng.submit(reqs[2]).status is RequestStatus.PENDING
+    assert reqs[0].status is RequestStatus.REJECTED   # oldest paid
+    assert isinstance(reqs[0].error, QueueFull)
+    assert [r.request_id for r in eng.pending] == [1, 2]
+    done = eng.run()
+    # the shed request surfaces through step()'s finished list
+    assert {r.request_id for r in done} == {0, 1, 2}
+    assert reqs[1].status is RequestStatus.DONE
+    assert reqs[2].status is RequestStatus.DONE
+
+
+# ----- all-pinned pool: HOL bypass + no deadlock -----
+
+
+def test_all_pinned_pool_never_deadlocks(served):
+    """Externally pinning every slot must not hang run(): after
+    ``stall_limit`` fruitless steps the head is rejected MemoryExhausted;
+    once unpinned, later requests complete normally."""
+    cfg, model, params, store = served
+    eng = _engine(model, params, store, hbm_slots=1, max_rows=2,
+                  stall_limit=2)
+    mgr = eng.memory
+    mgr.acquire(_aid(0))                         # hold the only slot
+    victim, ok = _requests(cfg, [_aid(1), _aid(2)], max_new=1)
+    eng.submit(victim), eng.submit(ok)
+    done, spins = [], 0
+    while (eng.pending or eng.active_rows) and spins < 50:
+        done += eng.step()
+        spins += 1
+        if victim.status.terminal and mgr.pinned(_aid(0)):
+            mgr.unpin(_aid(0))                   # release the episode
+    assert spins < 50                            # never deadlocked
+    assert victim.status is RequestStatus.REJECTED
+    assert isinstance(victim.error, MemoryExhausted)
+    assert ok.status is RequestStatus.DONE and ok.output.size == 1
+
+
+def test_hol_bypass_admits_resident_adapter(served):
+    """With the head's adapter unable to claim a slot, a queued request
+    whose adapter is already resident jumps the line (a hit pins the
+    existing page, stealing nothing); hol_bypass=False keeps FIFO."""
+    cfg, model, params, store = served
+    eng = _engine(model, params, store, hbm_slots=1, max_rows=2)
+    mgr = eng.memory
+    mgr.acquire(_aid(0))                         # u0 resident AND pinned
+    blocked, rider = _requests(cfg, [_aid(1), _aid(0)], max_new=3)
+    eng.submit(blocked), eng.submit(rider)
+    eng.step()
+    assert rider.status is RequestStatus.RUNNING  # bypassed the stuck head
+    assert blocked.status is RequestStatus.PENDING
+    mgr.unpin(_aid(0))                           # end the episode: both run
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1}
+    assert blocked.status is RequestStatus.DONE
+
+    eng2 = _engine(model, params, store, hbm_slots=1, max_rows=2,
+                   hol_bypass=False, stall_limit=100)
+    mgr2 = eng2.memory
+    mgr2.acquire(_aid(0))
+    b2, r2 = _requests(cfg, [_aid(1), _aid(0)], max_new=1)
+    eng2.submit(b2), eng2.submit(r2)
+    eng2.step()
+    assert r2.status is RequestStatus.PENDING    # strict FIFO: waits
+    mgr2.unpin(_aid(0))
+
+
+# ----- host-tier transport: retry, recovery, degradation -----
+
+
+def test_transient_failures_recover_via_retry():
+    plan = FaultPlan(seed=3, transient_fail_prob=0.4)
+    calls = []
+    tr = HostTransport(faults=plan, max_retries=8, sleep=lambda s: None)
+    out = tr.read("a", lambda: calls.append(1) or "page")
+    assert out == "page" and len(calls) == 1
+    st = tr.stats()
+    assert st["failures"] == 0                   # budget absorbed the storm
+
+
+def test_permanent_failure_exhausts_retries():
+    plan = FaultPlan(fail_adapters=frozenset({"a"}))
+    tr = HostTransport(faults=plan, max_retries=2, sleep=lambda s: None)
+    with pytest.raises(HostReadError) as ei:
+        tr.read("a", lambda: "page")
+    assert ei.value.adapter_id == "a" and ei.value.attempts == 3
+    assert tr.stats()["failures"] == 1 and tr.stats()["retries"] == 2
+
+
+def test_latency_over_timeout_counts_as_failure():
+    plan = FaultPlan(read_latency_s=10.0, read_latency_prob=1.0)
+    tr = HostTransport(faults=plan, timeout_s=0.01, max_retries=1,
+                       sleep=lambda s: None)
+    with pytest.raises(HostReadError, match="timeout"):
+        tr.read("a", lambda: "page")
+    assert tr.stats()["timeouts"] == 2
+
+
+def test_stale_resident_page_served_on_read_failure(served):
+    """Degradation rung 1: an adapter re-registered while its host copy
+    fails keeps serving the stale-but-valid resident page instead of
+    failing the request."""
+    cfg, model, params, store0 = served
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    store.register_quantized(_aid(0), store0.quantized[_aid(0)])
+    plan = FaultPlan(fail_reads_from={_aid(0): 1})   # first read OK, then die
+    mgr = AdapterMemoryManager(store, params["lora"], num_slots=2,
+                               faults=plan)
+    mgr.transport.sleep = lambda s: None
+    s0 = mgr.acquire(_aid(0))                    # read #0: succeeds
+    assert s0 is not None
+    mgr.unpin(_aid(0))
+    # re-register (bumps version) → reload needed → host read now fails
+    store.register_quantized(_aid(0), store0.quantized[_aid(0)])
+    s1 = mgr.acquire(_aid(0))
+    assert s1 == s0                              # same slot, stale codes
+    assert mgr.stats()["stale_serves"] >= 1
+    assert mgr.stats()["host_read_failures"] >= 1
+
+
+def test_acquire_propagates_hostreaderror_without_stale_page(served):
+    cfg, model, params, store0 = served
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    store.register_quantized(_aid(0), store0.quantized[_aid(0)])
+    store.register_quantized(_aid(1), store0.quantized[_aid(1)])
+    plan = FaultPlan(fail_adapters=frozenset({_aid(1)}))
+    mgr = AdapterMemoryManager(store, params["lora"], num_slots=2,
+                               faults=plan)
+    mgr.transport.sleep = lambda s: None
+    assert mgr.acquire(_aid(0)) is not None      # healthy neighbor fine
+    with pytest.raises(HostReadError):
+        mgr.acquire(_aid(1))
+    assert not mgr.resident(_aid(1))
+
+
+def test_engine_rejects_memory_exhausted_on_permanent_read_failure(served):
+    cfg, model, params, store0 = served
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(2):
+        store.register_quantized(_aid(i), store0.quantized[_aid(i)])
+    plan = FaultPlan(fail_adapters=frozenset({_aid(1)}))
+    eng = _engine(model, params, store, faults=plan)
+    eng.memory.transport.sleep = lambda s: None
+    bad, good = _requests(cfg, [_aid(1), _aid(0)], max_new=1)
+    eng.submit(bad), eng.submit(good)
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1}
+    assert bad.status is RequestStatus.REJECTED
+    assert isinstance(bad.error, MemoryExhausted)
+    assert good.status is RequestStatus.DONE
+
+
+# ----- poison isolation -----
+
+
+@pytest.mark.parametrize("mode", ["continuous", "packed"])
+def test_poison_isolation_healthy_rows_token_identical(served, mode):
+    """A NaN-poisoned adapter co-batched with healthy ones: its requests
+    FAIL (quarantine), healthy co-batched rows match a solo run token for
+    token — in both continuous and packed modes."""
+    cfg, model, params, store0 = served
+    bad = _aid(1)
+    store = _poison_store(store0, params, bad=bad)
+    solo_store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(N_ADAPTERS):
+        if _aid(i) != bad:
+            solo_store.register_quantized(_aid(i), store0.quantized[_aid(i)])
+    seq = [_aid(0), bad, _aid(2), _aid(3)]
+    reqs = _requests(cfg, seq, seed=11, max_new=3)
+    solo_reqs = [r for r in _requests(cfg, seq, seed=11, max_new=3)
+                 if r.adapter_id != bad]
+    solo_eng = _engine(model, params, solo_store, mode=mode)
+    for r in solo_reqs:
+        solo_eng.submit(r)
+    ref = {r.request_id: r.output for r in solo_eng.run()}
+
+    eng = _engine(model, params, store, mode=mode)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1, 2, 3}
+    for r in reqs:
+        if r.adapter_id == bad:
+            assert r.status is RequestStatus.FAILED
+            assert isinstance(r.error, PoisonedAdapter)
+            assert r.error.kind == "poisoned_adapter"
+        else:
+            assert r.status is RequestStatus.DONE
+            np.testing.assert_array_equal(r.output, ref[r.request_id])
+    # the adapter is quarantined: later submits fail fast
+    late = eng.submit(_requests(cfg, [bad], seed=12)[0])
+    assert late.status is RequestStatus.FAILED
+    assert isinstance(late.error, PoisonedAdapter)
+
+
+def test_quarantine_clears_on_reregister(served):
+    """Quarantine is keyed to the registration version: re-uploading a
+    fixed adapter clears it and serves normally again."""
+    cfg, model, params, store0 = served
+    bad = _aid(1)
+    store = _poison_store(store0, params, bad=bad)
+    eng = _engine(model, params, store)
+    r0 = eng.submit(_requests(cfg, [bad], max_new=1)[0])
+    eng.run()
+    assert r0.status is RequestStatus.FAILED
+    assert eng._is_quarantined(bad)
+    store.register_quantized(bad, store0.quantized[bad])   # fixed upload
+    assert not eng._is_quarantined(bad)
+    r1 = eng.submit(_requests(cfg, [bad], max_new=1)[0])
+    done = eng.run()
+    assert done == [r1] and r1.status is RequestStatus.DONE
+    assert r1.output.size == 1
+
+
+# ----- fault-plan determinism -----
+
+
+def test_fault_plan_determinism():
+    def trace(plan):
+        out = []
+        for aid in ("a", "b", "a", "c", "a"):
+            for attempt in range(2):
+                out.append(plan.host_read(aid, attempt))
+        return out
+
+    mk = lambda: FaultPlan(seed=7, read_latency_s=0.004,
+                           read_latency_prob=0.5, transient_fail_prob=0.3)
+    assert trace(mk()) == trace(mk())            # same seed → same faults
+    assert trace(mk()) != trace(FaultPlan(
+        seed=8, read_latency_s=0.004, read_latency_prob=0.5,
+        transient_fail_prob=0.3))
+
+    assert named_plan("none") is None
+    storm = named_plan("storm", seed=5)
+    assert storm.seed == 5 and storm.transient_fail_prob > 0
+
+
+# ----- chaos mini-integration (quick-tier cousin of bench_chaos) -----
+
+
+def test_chaos_mini_storm_healthy_requests_token_identical(served):
+    """Seeded storm (latency spikes + transient read failures + one poison
+    adapter) over a slot-constrained engine: every healthy request DONE
+    with tokens identical to the fault-free run, poisoned requests FAILED,
+    nothing deadlocks."""
+    cfg, model, params, store0 = served
+    bad = _aid(3)
+    seq = [_aid(i % N_ADAPTERS) for i in range(8)]
+    mk_store = lambda: _poison_store(store0, params, bad=bad)
+
+    def run(faults):
+        store = mk_store()
+        eng = _engine(model, params, store, hbm_slots=2, max_rows=2,
+                      faults=faults)
+        if eng.memory.transport.faults is not None:
+            eng.memory.transport.sleep = lambda s: None
+        reqs = _requests(cfg, seq, seed=21, max_new=2)
+        for r in reqs:
+            eng.submit(r)
+        steps = 0
+        done = []
+        while (eng.pending or eng.active_rows or eng._terminated):
+            done += eng.step()
+            steps += 1
+            assert steps < 200, "scheduler deadlocked under faults"
+        return reqs, done
+
+    plan = FaultPlan(seed=13, read_latency_s=0.002, read_latency_prob=0.3,
+                     transient_fail_prob=0.3)
+    base_reqs, _ = run(None)
+    chaos_reqs, done = run(plan)
+    assert len(done) == len(seq)
+    for b, c in zip(base_reqs, chaos_reqs):
+        if c.adapter_id == bad:
+            assert c.status is RequestStatus.FAILED
+            assert isinstance(c.error, PoisonedAdapter)
+            assert b.status is RequestStatus.FAILED   # baseline agrees
+        else:
+            assert c.status is RequestStatus.DONE
+            np.testing.assert_array_equal(c.output, b.output)

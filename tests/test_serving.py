@@ -20,6 +20,7 @@ from repro.serving.engine import (
     iter_lora_linears,
     quantize_adapter_tree,
 )
+from repro.serving.faults import RequestStatus, UnknownAdapter
 
 
 @pytest.fixture(scope="module")
@@ -451,11 +452,13 @@ def test_unregister_removes_adapter_and_caches(tiny_model):
     assert store.packed_cache_bytes() == 0
     with pytest.raises(KeyError):
         store.unregister("u0")                    # double-free is an error
-    # a new request for the dropped adapter fails admission loudly
-    engine.submit(_mk_requests(cfg, 1, 1, seed=6)[0])
-    with pytest.raises(KeyError, match="u0"):
-        engine.step()
-    engine.pending.clear()
+    # a new request for the dropped adapter is REJECTED at submit with the
+    # structured UnknownAdapter error (not a KeyError deep in admission)
+    rej = engine.submit(_mk_requests(cfg, 1, 1, seed=6)[0])
+    assert rej.status is RequestStatus.REJECTED
+    assert isinstance(rej.error, UnknownAdapter)
+    assert rej.error.adapter_id == "u0" and rej.output.size == 0
+    assert not engine.pending                     # never enqueued
     # the paged tier frees the slot and host page on its next step
     req = _mk_requests(cfg, 1, 1, seed=7)[0]
     req.adapter_id = "u1"
