@@ -11,6 +11,15 @@ identical request stream on a fault-free engine.
 Reported per run: **goodput** (tokens of healthy DONE requests per
 second), **p99 step latency**, and the storm's **recovery** (steps from
 the end of the all-pinned episode to the next completed request).
+
+Time is **virtual**: each engine runs on an injectable
+:class:`~repro.serving.telemetry.ManualClock` — every scheduler step
+advances a fixed ``STEP_S`` and the fault plan's injected sleeps advance
+the same clock through the transport — so goodput, p99 step latency, and
+every deadline decision are exactly reproducible run-to-run (CI-stable:
+the storm-vs-baseline comparison measures the *injected* faults, not the
+host's scheduling jitter).
+
 Checks (the hard acceptance criteria):
 
 * every healthy in-deadline request finishes DONE with tokens identical
@@ -21,13 +30,12 @@ Checks (the hard acceptance criteria):
   even while every slot is pinned),
 * goodput under the storm stays within ``GOODPUT_BOUND`` of baseline.
 
-Latencies are interpret-mode CPU numbers; the *relative* storm-vs-baseline
-comparison and the parity/status checks are the decision-grade output.
+Latency/goodput figures are virtual-time numbers (``STEP_S`` per step +
+injected fault time), so the *relative* storm-vs-baseline comparison and
+the parity/status checks are the decision-grade output.
 """
 
 from __future__ import annotations
-
-import time
 
 import jax
 import numpy as np
@@ -38,6 +46,7 @@ from repro.launch.serve import random_trained_lora
 from repro.models import build_model
 from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
 from repro.serving.faults import FaultPlan, HostTransport, RequestStatus
+from repro.serving.telemetry import ManualClock
 
 N_ADAPTERS = 6
 N_REQUESTS = 12
@@ -50,6 +59,7 @@ DEADLINE_MS = 120_000.0      # generous: healthy requests must NOT time out
 PIN_AT, PIN_STEPS = 3, 2     # all-pinned episode: start step, duration
 STEP_CAP = 500               # deadlock tripwire
 GOODPUT_BOUND = 0.5          # storm goodput >= bound * baseline goodput
+STEP_S = 0.05                # virtual seconds of compute per scheduler step
 
 
 def _storm_plan() -> FaultPlan:
@@ -76,12 +86,20 @@ def _requests(cfg):
 
 def _drive(cfg, model, params, store, faults):
     """One full run: submit the stream, step to completion with the
-    all-pinned episode injected, collect per-step latencies + terminals."""
-    transport = (HostTransport(faults=faults, max_retries=6)
+    all-pinned episode injected, collect per-step latencies + terminals.
+
+    The engine and the fault transport share one :class:`ManualClock`:
+    every step costs a fixed ``STEP_S`` of virtual time, injected
+    latency/backoff sleeps advance the same clock, and deadline sweeps
+    read it — so the whole run (statuses, latencies, goodput) is a pure
+    function of the fault plan and the request stream."""
+    clock = ManualClock()
+    transport = (HostTransport(faults=faults, max_retries=6,
+                               sleep=clock.sleep)
                  if faults is not None else None)
     eng = MultiLoRAEngine(model, params, store, cache_capacity=64,
                           max_rows=ROWS, hbm_slots=SLOTS,
-                          faults=faults, transport=transport)
+                          faults=faults, transport=transport, clock=clock)
     reqs = _requests(cfg)
     for r in reqs:
         eng.submit(r)
@@ -89,7 +107,7 @@ def _drive(cfg, model, params, store, faults):
     lats, done, steps = [], [], 0
     pinned_ids, episode_end_step = [], None
     recovery_steps = None
-    t0 = time.perf_counter()
+    t0 = clock()
     while eng.pending or eng.active_rows or eng._terminated:
         if steps == PIN_AT:                   # pin EVERY slot externally
             pinned_ids = [aid for aid in list(mgr._where)]
@@ -99,9 +117,10 @@ def _drive(cfg, model, params, store, faults):
             for aid in pinned_ids:
                 mgr.unpin(aid)
             pinned_ids, episode_end_step = [], steps
-        ts = time.perf_counter()
-        fin = eng.step()
-        lats.append(time.perf_counter() - ts)
+        ts = clock()
+        fin = eng.step()                      # injected sleeps advance clock
+        clock.advance(STEP_S)                 # nominal per-step compute
+        lats.append(clock() - ts)
         done += fin
         steps += 1
         if (episode_end_step is not None and recovery_steps is None
@@ -109,7 +128,7 @@ def _drive(cfg, model, params, store, faults):
             recovery_steps = steps - episode_end_step
         if steps >= STEP_CAP:
             break
-    wall = time.perf_counter() - t0
+    wall = clock() - t0
     return {"reqs": reqs, "done": done, "steps": steps, "wall": wall,
             "lats": np.asarray(lats), "recovery_steps": recovery_steps,
             "mem": eng.memory_stats(), "eng": eng}
@@ -145,7 +164,7 @@ def run(report):
         p99 = float(np.percentile(run_["lats"] * 1e3, 99))
         report(f"serving.chaos,{name},requests={len(run_['reqs'])},"
                f"adapters={N_ADAPTERS},slots={SLOTS},rows={ROWS},"
-               f"goodput_tok_s={gp:.1f}(interpret),"
+               f"goodput_tok_s={gp:.1f}(virtual),"
                f"p99_step_ms={p99:.1f},steps={run_['steps']},"
                f"wall_s={run_['wall']:.2f},"
                f"stale_serves={run_['mem']['stale_serves']:.0f},"
@@ -155,7 +174,7 @@ def run(report):
 
     gp_base = line("baseline", base)
     gp_storm = line("storm", storm)
-    inj = plan.injected
+    inj = plan.stats()
     report(f"serving.chaos,injected,latency={inj.get('read_latency', 0)},"
            f"transient={inj.get('read_fail_transient', 0)},"
            f"corruption={inj.get('page_corruption', 0)},"

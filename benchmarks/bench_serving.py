@@ -46,6 +46,7 @@ from repro.core import LoRAQuantConfig
 from repro.launch.serve import random_trained_lora
 from repro.models import build_model
 from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.telemetry import Telemetry
 
 N_ADAPTERS = 3
 N_REQUESTS = 6
@@ -136,10 +137,16 @@ def _staggered_continuous(engine, cfg):
     return done, time.perf_counter() - t0, (t0, t_arr2)
 
 
-def run(report):
+def run(report, telemetry=None):
+    """``telemetry``: an optional shared :class:`Telemetry` registry (the
+    driver passes one so BENCH_serving.json and the exported metrics /
+    trace files carry real request-latency percentiles from the Zipf-churn
+    engine instead of wall-clock means)."""
     import dataclasses as dc
     import jax.numpy as jnp
 
+    if telemetry is None:
+        telemetry = Telemetry()
     cfg = dc.replace(get_config("llama3.2-3b", "smoke"), dtype=jnp.float32)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -266,9 +273,14 @@ def run(report):
         for frac in (25, 50, 100)]
     engines = {}
     for name, slots in settings:
+        # the 50%-residency engine (real paging traffic + queue waits) is
+        # the instrumented one: its TTFT/E2E/queue-wait histograms and
+        # per-pool memory counters land in the shared telemetry registry
+        tel = telemetry if name == "slots_50pct" else None
         engines[name] = MultiLoRAEngine(model, params, churn_store,
                                         cache_capacity=64,
-                                        max_rows=CHURN_ROWS, hbm_slots=slots)
+                                        max_rows=CHURN_ROWS, hbm_slots=slots,
+                                        telemetry=tel)
         _churn_submit(engines[name])                  # warmup (jit traces,
         engines[name].run()                           # pool allocation)
     reps = {name: [] for name, _ in settings}
@@ -330,6 +342,31 @@ def run(report):
     within = frac_runs[50]["tok_s"] >= 0.8 * frac_runs[100]["tok_s"]
     report(f"serving.check,churn_50pct_within_20pct_of_all_resident,"
            f"{'PASS' if within else 'FAIL'}")
+
+    # real request-latency percentiles from the instrumented churn engine's
+    # histograms (what BENCH_serving.json carried only as means before)
+    engines["slots_50pct"].memory_stats()     # mirror pool gauges into tel
+    lat = telemetry.latency_summary()
+
+    def _ms(summ, q):
+        v = summ.get(q)
+        return -1.0 if v is None else v * 1e3
+
+    ttft = lat.get("serving_ttft_seconds", {})
+    e2e = lat.get("serving_e2e_seconds", {})
+    qw = lat.get("serving_queue_wait_seconds", {})
+    report(f"serving.latency,churn_slots_50pct,"
+           f"ttft_p50_ms={_ms(ttft, 'p50'):.1f},"
+           f"ttft_p95_ms={_ms(ttft, 'p95'):.1f},"
+           f"ttft_p99_ms={_ms(ttft, 'p99'):.1f},"
+           f"e2e_p50_ms={_ms(e2e, 'p50'):.1f},"
+           f"e2e_p95_ms={_ms(e2e, 'p95'):.1f},"
+           f"e2e_p99_ms={_ms(e2e, 'p99'):.1f},"
+           f"queue_wait_p99_ms={_ms(qw, 'p99'):.1f},"
+           f"samples={ttft.get('count', 0)}")
+    nonempty = all(s.get("count", 0) > 0 for s in (ttft, e2e, qw))
+    report(f"serving.check,churn_latency_histograms_nonempty,"
+           f"{'PASS' if nonempty else 'FAIL'}")
 
     # ---- mixed-recipe churn: the same Zipf stream over a fleet whose
     # head adapters carry 3-bit recipes and whose tail runs near 1 bit

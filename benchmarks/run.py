@@ -14,6 +14,7 @@ perf trajectory. The smoke targets used by CI are:
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -43,6 +44,12 @@ def main(argv=None):
                         "fig4,fig6,kernels,recipes,serving,chaos)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write parsed metrics + checks to this JSON file")
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the shared telemetry registry as Prometheus "
+                        "text exposition after the suites finish")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write the shared telemetry Chrome-trace JSON "
+                        "(load in Perfetto / chrome://tracing)")
     args = p.parse_args(argv)
 
     from . import (
@@ -72,6 +79,11 @@ def main(argv=None):
     }
     wanted = args.only.split(",") if args.only else list(suites)
 
+    # one shared registry across every suite that opts in (accepts a
+    # ``telemetry`` kwarg) — its histograms feed the exports below
+    from repro.serving.telemetry import Telemetry
+    telemetry = Telemetry()
+
     lines = []
 
     def report(line: str):
@@ -82,7 +94,11 @@ def main(argv=None):
     for name in wanted:
         t0 = time.perf_counter()
         print(f"# --- {name} ---")
-        suites[name](report)
+        fn = suites[name]
+        if "telemetry" in inspect.signature(fn).parameters:
+            fn(report, telemetry=telemetry)
+        else:
+            fn(report)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
 
     fails = [l for l in lines if l.endswith("FAIL")]
@@ -110,6 +126,12 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")
+    if args.metrics_out:
+        telemetry.write_prometheus(args.metrics_out)
+        print(f"# wrote {args.metrics_out}")
+    if args.trace_out:
+        telemetry.write_chrome_trace(args.trace_out)
+        print(f"# wrote {args.trace_out}")
     return 1 if fails else 0
 
 

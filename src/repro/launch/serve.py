@@ -22,6 +22,33 @@ from repro.core import LoRAQuantConfig
 from repro.models import build_model
 from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
 from repro.serving.faults import RequestStatus, named_plan
+from repro.serving.telemetry import Telemetry
+
+
+def _fmt_ms(v) -> str:
+    return "-" if v is None else f"{v * 1e3:.1f}ms"
+
+
+def print_latency_summary(telemetry: Telemetry, prefix: str = "[serve]"):
+    """Per-terminal-status p50/p95/p99 TTFT and E2E lines from the
+    telemetry histograms (one line per status seen)."""
+    reg = telemetry.registry
+    statuses = sorted({dict(m.labels).get("status", "")
+                       for m in reg.series("serving_e2e_seconds")})
+    for status in statuses:
+        parts = []
+        for title, name in (("ttft", "serving_ttft_seconds"),
+                            ("e2e", "serving_e2e_seconds")):
+            hs = [m for m in reg.series(name)
+                  if dict(m.labels).get("status") == status]
+            if not hs or not any(h.count for h in hs):
+                continue
+            h = hs[0]
+            parts.append(f"{title} p50={_fmt_ms(h.percentile(50))} "
+                         f"p95={_fmt_ms(h.percentile(95))} "
+                         f"p99={_fmt_ms(h.percentile(99))} (n={h.count})")
+        if parts:
+            print(f"{prefix} latency[{status}]: {' | '.join(parts)}")
 
 
 def parse_variant(s: str) -> LoRAQuantConfig:
@@ -120,6 +147,17 @@ def main(argv=None):
                         "storm) injected into host reads and uploads — the "
                         "chaos harness of docs/robustness.md")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the final Prometheus-style metrics "
+                        "exposition here (docs/observability.md)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome-trace JSON of request/scheduler "
+                        "spans here (open in Perfetto / chrome://tracing)")
+    p.add_argument("--events-out", default=None, metavar="PATH",
+                   help="write the JSONL lifecycle event log here")
+    p.add_argument("--stats-every", type=int, default=0, metavar="N",
+                   help="continuous mode: print a one-line stats snapshot "
+                        "every N scheduler steps (0 = off)")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch, args.preset)
@@ -166,13 +204,14 @@ def main(argv=None):
     print(f"[serve] quantized in {time.perf_counter()-t0:.1f}s; "
           f"store stats: {store.stats()}")
 
+    telemetry = Telemetry()
     engine = MultiLoRAEngine(model, params, store, cache_capacity=128,
                              mode=args.mode, max_rows=args.max_rows,
                              hbm_slots=args.slots,
                              queue_limit=args.queue_limit,
                              queue_policy=args.queue_policy,
                              default_deadline_ms=args.deadline_ms,
-                             faults=plan)
+                             faults=plan, telemetry=telemetry)
     drng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -182,7 +221,22 @@ def main(argv=None):
             max_new_tokens=args.max_new,
         ))
     t0 = time.perf_counter()
-    done = engine.run()
+    if args.mode == "continuous" and args.stats_every > 0:
+        done = []
+        while engine.pending or engine.active_rows or engine._terminated:
+            done.extend(engine.step())
+            if engine._step_count % args.stats_every == 0:
+                st = engine.stats()
+                mem = engine.memory_stats()
+                print(f"[serve] step {st['decode_steps']}: "
+                      f"active={st['active_rows']}/{args.max_rows} "
+                      f"pending={st['pending']} "
+                      f"finished={sum(st.get('finished', {}).values())} "
+                      f"tokens={st.get('tokens', 0)} "
+                      f"mem hits/misses={mem.get('hits', 0)}/"
+                      f"{mem.get('misses', 0)}")
+    else:
+        done = engine.run()
     dt = time.perf_counter() - t0
     ok = [r for r in done if r.status is RequestStatus.DONE]
     total_tokens = sum(len(r.output) for r in ok)
@@ -199,16 +253,29 @@ def main(argv=None):
               f"{r.status.value} — {r.error}")
     if engine.quarantined:
         print(f"[serve] quarantined adapters: {sorted(engine.quarantined)}")
+    print_latency_summary(telemetry)
     mem = engine.memory_stats()
     if mem:
+        # hit_rate is None until the first acquire — an idle pool must not
+        # print as a perfect one
+        rate = ("n/a (0 lookups)" if mem["hit_rate"] is None
+                else f"{mem['hit_rate']:.2f} ({mem['lookups']} lookups)")
         print(f"[serve] adapter memory: {mem['slots']} slots in "
               f"{mem['pools']:.0f} pool(s) "
               f"({mem['hbm_slot_mb']:.3f} MB HBM) over "
               f"{store.stats()['adapters']:.0f} adapters "
               f"({mem['host_tier_mb']:.3f} MB host tier); "
-              f"hit rate {mem['hit_rate']:.2f}, "
+              f"hit rate {rate}, "
               f"swap-ins {mem['swap_ins']:.0f}, "
               f"evictions {mem['evictions']:.0f}")
+        for label, pool in sorted(mem["per_pool"].items()):
+            prate = ("n/a" if pool["hit_rate"] is None
+                     else f"{pool['hit_rate']:.2f}")
+            print(f"[serve]   pool {label}: {pool['resident']}/"
+                  f"{pool['capacity']} resident, hit rate {prate}, "
+                  f"swap-ins {pool['swap_ins']} "
+                  f"({pool['swap_in_bytes'] / 1e6:.3f} MB), "
+                  f"evictions {pool['evictions']}")
     per = store.adapter_stats()
     col = " ".join(f"{aid}={st['avg_bits']:.2f}"
                    for aid, st in sorted(per.items()))
@@ -216,6 +283,17 @@ def main(argv=None):
     if ok:
         print(f"[serve] sample output (req {ok[0].request_id}): "
               f"{ok[0].output.tolist()}")
+    if args.metrics_out:
+        telemetry.write_prometheus(args.metrics_out)
+        print(f"[serve] wrote metrics exposition to {args.metrics_out}")
+    if args.trace_out:
+        telemetry.write_chrome_trace(args.trace_out)
+        print(f"[serve] wrote Chrome trace to {args.trace_out} "
+              f"(open in Perfetto / chrome://tracing)")
+    if args.events_out:
+        telemetry.write_jsonl(args.events_out)
+        print(f"[serve] wrote {len(telemetry.events)} lifecycle events "
+              f"to {args.events_out}")
     return done
 
 

@@ -21,11 +21,13 @@ from .faults import (
     named_plan,
 )
 from .memory import AdapterMemoryManager
+from .telemetry import ManualClock, MetricsRegistry, Telemetry
 
 __all__ = [
     "AdapterMemoryManager", "AdapterStore", "AdapterValidationError",
     "DeadlineExceeded", "FaultPlan", "HostReadError", "HostTransport",
-    "MemoryExhausted", "MultiLoRAEngine", "PoisonedAdapter", "QuantizedAdapter",
-    "QueueFull", "Request", "RequestError", "RequestStatus", "UnknownAdapter",
+    "ManualClock", "MemoryExhausted", "MetricsRegistry", "MultiLoRAEngine",
+    "PoisonedAdapter", "QuantizedAdapter", "QueueFull", "Request",
+    "RequestError", "RequestStatus", "Telemetry", "UnknownAdapter",
     "dequantize_adapter", "named_plan", "quantize_adapter_tree",
 ]

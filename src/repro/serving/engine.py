@@ -79,6 +79,7 @@ from repro.serving.faults import (
     UnknownAdapter,
     validate_lora_tree,
 )
+from repro.serving.telemetry import Telemetry
 
 
 def iter_lora_linears(lora_tree) -> List[Tuple[str, Any]]:
@@ -708,7 +709,9 @@ class MultiLoRAEngine:
                  hol_bypass: bool = True, stall_limit: int = 3,
                  default_deadline_ms: Optional[float] = None,
                  faults: Optional[FaultPlan] = None,
-                 transport: Optional[HostTransport] = None):
+                 transport: Optional[HostTransport] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 clock=None):
         if queue_policy not in ("reject", "shed_oldest"):
             raise ValueError(f"queue_policy must be 'reject' or "
                              f"'shed_oldest', got {queue_policy!r}")
@@ -728,6 +731,21 @@ class MultiLoRAEngine:
         self.default_deadline_ms = default_deadline_ms
         self.faults = faults
         self.transport = transport
+        self.telemetry = telemetry
+        # every timestamp the engine takes (deadlines, TTFT, traces) comes
+        # from ONE injectable monotonic clock: a telemetry object's clock
+        # by default, so trace timestamps and deadline sweeps agree, and a
+        # ManualClock under test makes all of them deterministic
+        if clock is not None:
+            self.clock = clock
+        elif telemetry is not None:
+            self.clock = telemetry.clock
+        else:
+            self.clock = time.perf_counter
+        if telemetry is not None:
+            telemetry.install_kernel_counter()
+        self._wave = 0                    # admission-wave ordinal (telemetry)
+        self._step_count = 0
         self.pending: List[Request] = []
         # adapters quarantined at fault time: id -> store version when
         # quarantined (a re-register bumps the version and auto-clears)
@@ -753,16 +771,21 @@ class MultiLoRAEngine:
 
     # ----- request lifecycle -----
 
-    @staticmethod
-    def _finalize(req: Request, status: RequestStatus,
+    def _finalize(self, req: Request, status: RequestStatus,
                   error: Optional[RequestError] = None) -> Request:
         """Move a request to a terminal state. Terminal requests always
         carry ``output`` (possibly empty) so callers never branch on
-        ``None``; non-DONE terminals carry the structured ``error``."""
+        ``None``; non-DONE terminals carry the structured ``error``.
+        Every terminal transition flows through here — the single place
+        the telemetry layer observes E2E latency and retire causes."""
         req.status = status
         req.error = error
         if req.output is None:
             req.output = np.zeros((0,), np.int32)
+        if self.telemetry is not None:
+            cause = error.kind if error is not None else "ok"
+            self.telemetry.on_retire(req.request_id, status.name.lower(),
+                                     cause, len(req.output))
         return req
 
     def _quarantine(self, adapter_id: str):
@@ -825,9 +848,11 @@ class MultiLoRAEngine:
         request is returned from the next :meth:`step`).
         """
         if req.t_submit is None:
-            req.t_submit = time.perf_counter()
+            req.t_submit = self.clock()
         if req.deadline_ms is None:
             req.deadline_ms = self.default_deadline_ms
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req.request_id, req.adapter_id)
         if self._reject_now(req) is not None:
             return req
         if (self.queue_limit is not None
@@ -872,10 +897,12 @@ class MultiLoRAEngine:
                                        {"tokens": jnp.asarray(toks),
                                         "start": jnp.asarray(starts)})
         last = jnp.argmax(logits[:, -1, :], axis=-1)
-        now = time.perf_counter()
+        now = self.clock()
         for r in reqs:
             r.t_first = now
             r.status = RequestStatus.RUNNING
+            if self.telemetry is not None:
+                self.telemetry.on_first_token(r.request_id)
         n_new = max(r.max_new_tokens for r in reqs)
         outs = [last]
         start_arr = jnp.asarray(starts)
@@ -937,13 +964,49 @@ class MultiLoRAEngine:
             self._memory = AdapterMemoryManager(
                 self.store, self.params["lora"], num_slots=self.hbm_slots,
                 tile_t=self.seg_tile, interpret=self.interpret,
-                transport=self.transport, faults=self.faults)
+                transport=self.transport, faults=self.faults,
+                telemetry=self.telemetry)
         return self._memory
 
     def memory_stats(self) -> Dict[str, float]:
         """Hit/miss/swap/eviction counters and per-tier bytes of the paged
         adapter memory (empty dict before the first continuous step)."""
         return self._memory.stats() if self._memory is not None else {}
+
+    def stats(self) -> Dict[str, Any]:
+        """Scheduler counters as a thin view over the telemetry registry.
+
+        Always carries the live scheduler state (``pending`` /
+        ``active_rows`` / ``quarantined``); with a :class:`Telemetry`
+        attached it adds submitted/step/wave/token totals, terminal counts
+        by status, and p50/p95/p99 latency summaries for TTFT, E2E, and
+        queue wait (``None``-valued percentiles when a histogram is
+        empty). Without telemetry only the live state is reported —
+        the engine keeps no shadow counters of its own.
+        """
+        out: Dict[str, Any] = {
+            "pending": len(self.pending),
+            "active_rows": self.active_rows,
+            "quarantined": len(self.quarantined),
+            "decode_steps": self._step_count,
+            "admission_waves": self._wave,
+        }
+        if self.telemetry is None:
+            return out
+        reg = self.telemetry.registry
+        out["submitted"] = int(reg.value("serving_requests_submitted_total"))
+        out["tokens"] = int(reg.value("serving_tokens_total"))
+        by_status: Dict[str, int] = {}
+        by_cause: Dict[str, int] = {}
+        for m in reg.series("serving_requests_total"):
+            labels = dict(m.labels)
+            s, c = labels.get("status", ""), labels.get("cause", "")
+            by_status[s] = by_status.get(s, 0) + int(m.value)
+            by_cause[c] = by_cause.get(c, 0) + int(m.value)
+        out["finished"] = by_status
+        out["retire_causes"] = by_cause
+        out["latency"] = self.telemetry.latency_summary()
+        return out
 
     def _tpad(self, req: Request) -> int:
         return max(self.seg_tile,
@@ -967,6 +1030,11 @@ class MultiLoRAEngine:
             np.pad(np.asarray(r.prompt), (tpad - len(r.prompt), 0))
             for r in reqs
         ]).astype(np.int32)
+        self._wave += 1
+        if self.telemetry is not None:
+            for req, row_idx in zip(reqs, rows):
+                self.telemetry.on_admit(req.request_id, self._wave, row_idx)
+        t_pre = self.clock()
         # fetch the tree AFTER acquire()s: this step's swap-ins are in it
         packed = self.memory.serving_tree()
         pre = {"base": self.params["base"],
@@ -975,13 +1043,19 @@ class MultiLoRAEngine:
         logits, grp_caches = self._prefill(
             pre, {"tokens": jnp.asarray(toks), "start": jnp.asarray(starts)})
         firsts = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-        now = time.perf_counter()
+        now = self.clock()
+        if self.telemetry is not None:
+            self.telemetry.on_prefill(self._wave,
+                                      [r.request_id for r in reqs], int(tpad),
+                                      now - t_pre)
         self._caches = self._scatter_rows(
             self._caches, grp_caches, jnp.asarray(np.asarray(rows, np.int32)))
         out = []
         for b, (req, row_idx) in enumerate(zip(reqs, rows)):
             req.t_first = now
             req.status = RequestStatus.RUNNING
+            if self.telemetry is not None:
+                self.telemetry.on_first_token(req.request_id)
             row = _Row(req=req, start=int(starts[b]),
                        prompt_len=len(req.prompt), emitted=[int(firsts[b])])
             self._rows[row_idx] = row
@@ -1129,7 +1203,7 @@ class MultiLoRAEngine:
             return finished
         mgr = self.memory
         mgr.refresh()                      # reconcile store mutations
-        now = time.perf_counter()
+        t_step = now = self.clock()
         # queue-deadline sweep: expired waiters retire without a row
         still: List[Request] = []
         for r in self.pending:
@@ -1244,6 +1318,12 @@ class MultiLoRAEngine:
             dec, jnp.asarray(toks), self._caches,
             jnp.asarray(pos), jnp.asarray(start))
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        self._step_count += 1
+        if self.telemetry is not None:
+            self.telemetry.on_decode_step(
+                self._step_count, self.clock() - t_step, len(active),
+                self.max_rows, len(self.pending),
+                request_ids=[self._rows[i].req.request_id for i in active])
         for i in active:
             row = self._rows[i]
             row.emitted.append(int(nxt[i]))
@@ -1264,7 +1344,7 @@ class MultiLoRAEngine:
         each adapter's codes are integrity-screened once here; poisoned
         ones are quarantined and their requests FAIL without touching the
         rest of the batch."""
-        now = time.perf_counter()
+        now = self.clock()
         healthy: List[Request] = []
         for r in reqs:
             if self._reject_now(r) is not None:

@@ -253,6 +253,15 @@ class FaultPlan:
             raise AdapterValidationError(
                 f"injected onboarding failure for adapter {adapter_id!r}")
 
+    # ----- accounting -----
+
+    def stats(self) -> Dict[str, int]:
+        """Injected-event counts by op (``read_latency`` /
+        ``read_fail_transient`` / ``read_fail_permanent`` /
+        ``page_corruption`` / ``onboard_fail``) — the injection-side ledger
+        matching the serving side's fault counters."""
+        return dict(self.injected)
+
 
 def named_plan(name: str, **overrides) -> Optional[FaultPlan]:
     """Named FaultPlans for ``launch/serve.py --inject`` and the chaos

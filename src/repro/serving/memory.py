@@ -153,7 +153,8 @@ class AdapterMemoryManager:
                  tile_t: int = 8, interpret: bool = True,
                  transport: Optional[HostTransport] = None,
                  faults: Optional[FaultPlan] = None,
-                 verify_pages: bool = True):
+                 verify_pages: bool = True,
+                 telemetry=None):
         if num_slots is not None and num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.store = store
@@ -192,11 +193,57 @@ class AdapterMemoryManager:
 
         self._tree = None                  # cached serving tree (dirty=None)
         self._seen_mutations = None
+        self.telemetry = telemetry         # optional Telemetry facade
         self.hits = 0
         self.misses = 0
         self.swap_ins = 0
+        self.swap_in_bytes = 0
         self.evictions = 0
         self.stale_serves = 0
+        # per-pool (per recipe signature) breakdown of the counters above —
+        # the residency-cliff instrument: a mixed-recipe fleet thrashing ONE
+        # pool shows up here while the global hit rate still looks healthy
+        self._per_pool: Dict[tuple, Dict[str, int]] = {}
+        # prefetch outcomes (hit / staged / failed / no_slot): opportunistic
+        # staging is separate from the admission hit-rate by design, so it
+        # gets its own counters instead of polluting hits/misses
+        self.prefetch_counts: Dict[str, int] = {
+            "hit": 0, "staged": 0, "failed": 0, "no_slot": 0}
+
+    # ----- telemetry plumbing -----
+
+    @staticmethod
+    def _sig_label(sig: tuple) -> str:
+        """Stable label for one recipe-signature pool, e.g. ``2-64-1`` for
+        (bits_high=2, group_size=64, bits_low=1)."""
+        return "-".join(str(x) for x in sig)
+
+    def _count(self, sig: tuple, key: str, n: int = 1):
+        """Bump one per-pool counter and mirror it into the telemetry
+        registry (``adapter_memory_<key>_total{pool=...}``) when attached."""
+        pool = self._per_pool.setdefault(
+            sig, {"hits": 0, "misses": 0, "swap_ins": 0,
+                  "swap_in_bytes": 0, "evictions": 0})
+        pool[key] += n
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                f"adapter_memory_{key}_total",
+                pool=self._sig_label(sig)).inc(n)
+
+    def _count_prefetch(self, outcome: str):
+        self.prefetch_counts[outcome] += 1
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "adapter_memory_prefetch_total",
+                help="prefetch staging outcomes",
+                outcome=outcome).inc()
+
+    def _count_stale(self):
+        self.stale_serves += 1
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "adapter_memory_stale_serves_total",
+                help="degraded serves from a stale resident page").inc()
 
     # ----- layout -----
 
@@ -524,6 +571,7 @@ class AdapterMemoryManager:
             slot = loc[1]
             self._free_slot(aid)
             self.evictions += 1
+            self._count(sig, "evictions")
             return slot
         if self._growable:
             slot = pool.capacity
@@ -558,6 +606,7 @@ class AdapterMemoryManager:
             sig = loc[0]
             self._free_slot(aid)
             self.evictions += 1
+            self._count(sig, "evictions")
             self._shrink_tail(self._pools[sig])
         # final pass: tails freed by earlier evictions in any order
         for pool in self._pools.values():
@@ -597,6 +646,7 @@ class AdapterMemoryManager:
                 # a later acquire re-faults it and surfaces the error
                 self._free_slot(owner)
                 self.evictions += 1
+                self._count(pool.sig, "evictions")
         if cap != pool.capacity:
             self._resize_pool(pool, cap)
 
@@ -618,6 +668,9 @@ class AdapterMemoryManager:
             self._lru[adapter_id] = None
             self._lru.move_to_end(adapter_id)
         self.swap_ins += 1
+        self.swap_in_bytes += page.nbytes
+        self._count(sig, "swap_ins")
+        self._count(sig, "swap_in_bytes", page.nbytes)
         self._tree = None
 
     # ----- engine-facing operations -----
@@ -649,6 +702,7 @@ class AdapterMemoryManager:
         sig = self._sig_of(adapter_id)
         if self.resident(adapter_id):
             self.hits += 1
+            self._count(sig, "hits")
             local = self._where[adapter_id][1]
         else:
             loc = self._where.get(adapter_id)
@@ -663,6 +717,7 @@ class AdapterMemoryManager:
                 if local is None:
                     return None                # retried next step — not
             self.misses += 1                   # charged as a miss
+            self._count(sig, "misses")
             try:
                 self._swap_in(adapter_id, sig, local)
             except HostReadError:
@@ -670,7 +725,7 @@ class AdapterMemoryManager:
                     raise
                 # degradation rung 1: the slot still holds the last good
                 # version of this adapter's codes — serve those
-                self.stale_serves += 1
+                self._count_stale()
         self._lru[adapter_id] = None
         self._lru.move_to_end(adapter_id)
         self._reserved.discard(adapter_id)
@@ -703,12 +758,17 @@ class AdapterMemoryManager:
                     self._reserved = reserved      # protect earlier stages
                     slot = self._find_slot(sig)
                     if slot is None:
+                        self._count_prefetch("no_slot")
                         continue
                 try:
                     self._swap_in(aid, sig, slot)
                 except (HostReadError, PoisonedAdapter):
+                    self._count_prefetch("failed")
                     continue       # prefetch is opportunistic: admission's
-            self._lru[aid] = None  # acquire surfaces the error properly
+                self._count_prefetch("staged")
+            else:                  # acquire surfaces the error properly
+                self._count_prefetch("hit")
+            self._lru[aid] = None
             self._lru.move_to_end(aid)
             reserved.add(aid)
         self._reserved = reserved
@@ -752,7 +812,7 @@ class AdapterMemoryManager:
                     except (HostReadError, PoisonedAdapter):
                         # keep serving the pinned stale page; acquire /
                         # the engine's poison sweep handle the rest
-                        self.stale_serves += 1
+                        self._count_stale()
                 else:
                     # pinned page whose recipe moved pools: read the new
                     # page FIRST (a failed read must leave the old pool
@@ -761,7 +821,7 @@ class AdapterMemoryManager:
                     try:
                         self._host_page(aid)
                     except (HostReadError, PoisonedAdapter):
-                        self.stale_serves += 1
+                        self._count_stale()
                         continue
                     local = self._find_slot(sig_now)
                     old_sig, old_local = self._where[aid]
@@ -844,9 +904,46 @@ class AdapterMemoryManager:
     def host_bytes(self) -> int:
         return sum(p.nbytes for p in self._host.values())
 
-    def stats(self) -> Dict[str, float]:
-        total = self.hits + self.misses
+    def stats(self) -> Dict[str, Any]:
+        """Counters and per-tier bytes, plus a per-pool breakdown.
+
+        ``hit_rate`` is ``None`` when no :meth:`acquire` lookups have
+        happened yet — an idle pool must not read as a perfect one on a
+        dashboard; ``lookups`` carries the denominator so callers can
+        tell 0/0 from 100/100. ``per_pool`` keys each recipe signature's
+        label (e.g. ``"2-64-1"``) to its own hits/misses/swap-in-bytes/
+        evictions plus capacity and pin occupancy — the instrument for
+        the mixed-recipe residency cliff (``docs/observability.md``).
+        """
+        lookups = self.hits + self.misses
         t = self.transport.stats()
+        per_pool: Dict[str, Dict[str, Any]] = {}
+        for sig, pool in self._pools.items():
+            counts = self._per_pool.get(
+                sig, {"hits": 0, "misses": 0, "swap_ins": 0,
+                      "swap_in_bytes": 0, "evictions": 0})
+            pl = counts["hits"] + counts["misses"]
+            per_pool[self._sig_label(sig)] = {
+                **counts,
+                "lookups": pl,
+                "hit_rate": counts["hits"] / pl if pl else None,
+                "capacity": pool.capacity,
+                "resident": sum(o is not None for o in pool.owners),
+                "pinned": sum(1 for aid, (s, _) in self._where.items()
+                              if s == sig and self.pinned(aid)),
+                "page_bytes": pool.page_bytes,
+            }
+        if self.telemetry is not None:
+            reg = self.telemetry.registry
+            reg.gauge("adapter_memory_slots",
+                      help="total HBM slot capacity").set(
+                sum(p.capacity for p in self._pools.values()))
+            reg.gauge("adapter_memory_resident",
+                      help="resident pages").set(len(self._where))
+            reg.gauge("adapter_memory_pinned",
+                      help="pinned adapters").set(len(self._pins))
+            reg.gauge("adapter_memory_hbm_bytes").set(self.hbm_bytes())
+            reg.gauge("adapter_memory_host_bytes").set(self.host_bytes())
         return {
             "slots": sum(p.capacity for p in self._pools.values()),
             "pools": len(self._pools),
@@ -854,10 +951,13 @@ class AdapterMemoryManager:
             "pinned": len(self._pins),
             "hits": self.hits,
             "misses": self.misses,
-            "hit_rate": self.hits / total if total else 1.0,
+            "lookups": lookups,
+            "hit_rate": self.hits / lookups if lookups else None,
             "swap_ins": self.swap_ins,
+            "swap_in_bytes": self.swap_in_bytes,
             "evictions": self.evictions,
             "stale_serves": self.stale_serves,
+            "prefetch": dict(self.prefetch_counts),
             "dead": len(self._dead),
             "poisoned": len(self.poisoned),
             "host_reads": t["reads"],
@@ -865,4 +965,5 @@ class AdapterMemoryManager:
             "host_read_failures": t["failures"],
             "hbm_slot_mb": self.hbm_bytes() / 1e6,
             "host_tier_mb": self.host_bytes() / 1e6,
+            "per_pool": per_pool,
         }

@@ -1,0 +1,353 @@
+"""Serving telemetry: histogram/percentile math under a fake clock, the
+golden JSONL trace schema, export well-formedness, and the on/off parity
+contract (telemetry must never change tokens or kernel launches)."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_cfg
+from repro.core import LoRAQuantConfig
+from repro.kernels.quant_matmul import kernel as qm_kernel
+from repro.launch.serve import random_trained_lora
+from repro.models import build_model
+from repro.serving.engine import AdapterStore, MultiLoRAEngine, Request
+from repro.serving.telemetry import (
+    DEFAULT_LATENCY_BUCKETS,
+    EVENT_SCHEMA,
+    Histogram,
+    ManualClock,
+    MetricsRegistry,
+    Telemetry,
+)
+
+
+# ---------------------------------------------------------------- primitives
+
+
+def test_manual_clock():
+    c = ManualClock(start=2.0)
+    assert c() == 2.0
+    c.advance(0.5)
+    assert c() == 2.5
+    c.sleep(1.5)                       # time.sleep drop-in
+    assert c() == 4.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_histogram_percentiles_known_values():
+    h = Histogram("lat", buckets=(1.0, 2.0, 4.0, 8.0))
+    assert h.percentile(50) is None and h.mean is None   # empty
+    for v in (0.5, 1.5, 3.0, 3.0, 7.0):
+        h.observe(v)
+    assert h.count == 5 and h.sum == pytest.approx(15.0)
+    assert h.min == 0.5 and h.max == 7.0
+    # rank interpolation inside the (2, 4] bucket
+    assert h.percentile(50) == pytest.approx(2.5)
+    # tail estimate clamped to the observed max, not the bucket bound
+    assert h.percentile(99) == pytest.approx(7.0)
+    assert h.percentile(0) == pytest.approx(0.5)
+    assert h.percentile(100) == pytest.approx(7.0)
+    assert h.mean == pytest.approx(3.0)
+    s = h.summary()
+    assert s["count"] == 5 and s["p50"] == pytest.approx(2.5)
+
+
+def test_histogram_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=())
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(2.0, 1.0))
+
+
+def test_registry_labels_types_and_buckets():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", status="done").inc(3)
+    reg.counter("reqs_total", status="failed").inc()
+    assert reg.value("reqs_total") == 4            # family total
+    assert reg.value("reqs_total", status="done") == 3
+    # same (name, labels) -> same series object
+    assert reg.counter("reqs_total", status="done") is reg.counter(
+        "reqs_total", status="done")
+    # one type per name (Prometheus contract)
+    with pytest.raises(ValueError):
+        reg.gauge("reqs_total")
+    # one bucket grid per histogram family: first declaration wins
+    h1 = reg.histogram("lat", buckets=(1.0, 2.0), status="a")
+    h2 = reg.histogram("lat", buckets=(9.0,), status="b")
+    assert h1.bounds == h2.bounds == (1.0, 2.0)
+    with pytest.raises(ValueError):
+        reg.counter("ok_total").inc(-1)
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("toks_total", help="tokens").inc(7)
+    reg.gauge("depth").set(3)
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0), status="done")
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.to_prometheus()
+    lines = text.strip().splitlines()
+    assert "# HELP toks_total tokens" in lines
+    assert "# TYPE toks_total counter" in lines
+    assert "toks_total 7" in lines
+    assert "depth 3" in lines
+    # cumulative buckets + the implicit +Inf == _count
+    assert 'lat_seconds_bucket{status="done",le="0.1"} 1' in lines
+    assert 'lat_seconds_bucket{status="done",le="1"} 2' in lines
+    assert 'lat_seconds_bucket{status="done",le="+Inf"} 3' in lines
+    assert 'lat_seconds_count{status="done"} 3' in lines
+    assert any(l.startswith('lat_seconds_sum{status="done"}')
+               for l in lines)
+
+
+def test_default_latency_buckets_ascending():
+    assert all(a < b for a, b in zip(DEFAULT_LATENCY_BUCKETS,
+                                     DEFAULT_LATENCY_BUCKETS[1:]))
+
+
+def test_event_schema_enforced():
+    tel = Telemetry(clock=ManualClock())
+    with pytest.raises(ValueError):
+        tel.event("submit", request_id=0)          # missing adapter_id
+    with pytest.raises(ValueError):
+        tel.event("submit", request_id=0, adapter_id="u", extra=1)
+    tel.event("submit", request_id=0, adapter_id="u")
+    tel.event("custom_event", anything="goes")     # unknown names pass through
+    assert len(tel.events) == 2
+
+
+# ------------------------------------------------------------- engine-driven
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = smoke_cfg("llama3.2-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def tiny_store(tiny_model):
+    cfg, model, params = tiny_model
+    store = AdapterStore(LoRAQuantConfig(rho=0.9, ste_steps=0))
+    for i in range(3):
+        store.register(f"u{i}", random_trained_lora(
+            params["lora"], jax.random.PRNGKey(30 + i)))
+    return store
+
+
+def _requests(cfg, n=5, seed=7, max_new=3):
+    rng = np.random.default_rng(seed)
+    return [Request(request_id=rid, adapter_id=f"u{rid % 3}",
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=8).astype(np.int32),
+                    max_new_tokens=max_new)
+            for rid in range(n)]
+
+
+def _run(tiny_model, tiny_store, telemetry=None, clock=None, n=5):
+    cfg, model, params = tiny_model
+    eng = MultiLoRAEngine(model, params, tiny_store, cache_capacity=64,
+                          max_rows=2, hbm_slots=2,
+                          telemetry=telemetry, clock=clock)
+    for r in _requests(cfg, n=n):
+        eng.submit(r)
+    done = eng.run()
+    return eng, done
+
+
+GOLDEN_SCHEMA = {
+    "submit": {"request_id", "adapter_id"},
+    "admit": {"request_id", "adapter_id", "queue_wait_s", "wave", "row"},
+    "prefill": {"wave", "rows", "request_ids", "tpad", "dur_s"},
+    "decode_step": {"step", "dur_s", "active_rows", "max_rows", "queued"},
+    "first_token": {"request_id", "ttft_s"},
+    "retire": {"request_id", "adapter_id", "status", "cause", "tokens",
+               "e2e_s", "decode_steps"},
+}
+
+
+def test_trace_schema_golden(tiny_model, tiny_store):
+    """The JSONL event log is a stable contract: every lifecycle event
+    carries exactly the golden field set (plus ts/event), in lifecycle
+    order, for every request submitted."""
+    # the schema constant itself is pinned — renaming a field or event is
+    # a breaking change that must show up here, not just downstream
+    assert {k: set(v) for k, v in EVENT_SCHEMA.items()} == GOLDEN_SCHEMA
+
+    tel = Telemetry(clock=ManualClock())
+    try:
+        eng, done = _run(tiny_model, tiny_store, telemetry=tel)
+    finally:
+        tel.uninstall_kernel_counter()
+    assert len(done) == 5
+
+    events = [json.loads(l) for l in tel.to_jsonl().splitlines()]
+    assert events, "engine run emitted no events"
+    for ev in events:
+        name = ev.pop("event")
+        ts = ev.pop("ts")
+        assert isinstance(ts, float)
+        assert name in GOLDEN_SCHEMA, f"unknown event {name!r}"
+        assert set(ev) == GOLDEN_SCHEMA[name], (name, sorted(ev))
+
+    # per-request lifecycle: submit -> admit -> first_token -> retire
+    by_req = {}
+    for ev in (json.loads(l) for l in tel.to_jsonl().splitlines()):
+        if "request_id" in ev:
+            by_req.setdefault(ev["request_id"], []).append(ev["event"])
+    assert set(by_req) == {0, 1, 2, 3, 4}
+    for rid, seq in by_req.items():
+        assert seq[0] == "submit" and seq[-1] == "retire", (rid, seq)
+        assert seq.index("admit") < seq.index("first_token"), (rid, seq)
+
+    # trace table agrees with the event log
+    for rid, tr in tel.traces.items():
+        assert tr.status == "done" and tr.cause == "ok"
+        assert tr.tokens == 3 and tr.e2e_s >= 0 and tr.queue_wait_s >= 0
+
+
+def test_histograms_under_fake_clock(tiny_model, tiny_store):
+    """All three request-latency histograms fill, and the engine stats()
+    view exposes their summaries."""
+    clock = ManualClock()
+    tel = Telemetry(clock=clock)
+    try:
+        eng, done = _run(tiny_model, tiny_store, telemetry=tel)
+    finally:
+        tel.uninstall_kernel_counter()
+    lat = tel.latency_summary()
+    for name in ("serving_ttft_seconds", "serving_e2e_seconds",
+                 "serving_queue_wait_seconds"):
+        assert lat[name]["count"] == 5, name
+        assert lat[name]["p99"] is not None
+    st = eng.stats()
+    assert st["submitted"] == 5 and st["tokens"] == 15
+    assert st["finished"] == {"done": 5}
+    assert st["retire_causes"] == {"ok": 5}
+    assert st["latency"]["serving_e2e_seconds"]["count"] == 5
+    # registry totals agree with the engine counters
+    reg = tel.registry
+    assert reg.value("serving_requests_total", status="done") == 5
+    assert reg.value("serving_decode_steps_total") == st["decode_steps"]
+    assert reg.value("serving_admission_waves_total") == st["admission_waves"]
+
+
+def test_memory_stats_hit_rate_and_per_pool(tiny_model, tiny_store):
+    """A manager with zero lookups must report hit_rate=None (not the old
+    vacuous 1.0); after traffic the rate is a real ratio with a per-pool
+    breakdown."""
+    cfg, model, params = tiny_model
+    eng = MultiLoRAEngine(model, params, tiny_store, cache_capacity=64,
+                          max_rows=2, hbm_slots=2)
+    assert eng.memory_stats() == {}          # manager not built yet
+    fresh = eng.memory.stats()               # force-build, still idle
+    assert fresh["lookups"] == 0 and fresh["hit_rate"] is None
+
+    for r in _requests(cfg, n=4):
+        eng.submit(r)
+    eng.run()
+    st = eng.memory_stats()
+    assert st["lookups"] > 0
+    assert 0.0 <= st["hit_rate"] <= 1.0
+    assert st["hits"] + st["misses"] == st["lookups"]
+    assert st["per_pool"], "per-signature breakdown missing"
+    for label, pool in st["per_pool"].items():
+        for key in ("hits", "misses", "lookups", "hit_rate", "evictions",
+                    "swap_ins", "swap_in_bytes", "capacity", "resident",
+                    "pinned", "page_bytes"):
+            assert key in pool, (label, key)
+        assert pool["lookups"] == pool["hits"] + pool["misses"]
+    assert st["swap_in_bytes"] > 0                 # 3 adapters, 2 slots
+    assert set(st["prefetch"]) == {"hit", "staged", "failed", "no_slot"}
+
+
+def test_parity_tokens_and_launches(tiny_model, tiny_store):
+    """Telemetry is observation only: an instrumented engine must emit
+    token-identical output and issue zero extra pallas_call launches
+    compared to an uninstrumented one.
+
+    Trace-time launch counts of *consecutive* engine runs oscillate with
+    period 2 (jit-cache retention across runs), independent of telemetry
+    — so each configuration runs twice and the steady-state SECOND runs
+    (same cache parity) are compared."""
+    def measured(telemetry):
+        _run(tiny_model, tiny_store, telemetry=telemetry)
+        before = dict(qm_kernel.LAUNCH_COUNTS)
+        eng, done = _run(tiny_model, tiny_store, telemetry=telemetry)
+        delta = {k: v - before.get(k, 0)
+                 for k, v in qm_kernel.LAUNCH_COUNTS.items()
+                 if v - before.get(k, 0)}
+        return done, delta
+
+    _run(tiny_model, tiny_store)                   # warm jit caches
+    done_off, launches_off = measured(None)
+
+    tel = Telemetry(clock=ManualClock())
+    try:
+        done_on, launches_on = measured(tel)
+    finally:
+        tel.uninstall_kernel_counter()
+
+    assert launches_on == launches_off, "telemetry changed kernel launches"
+    by_id_off = {r.request_id: r for r in done_off}
+    assert len(done_on) == len(done_off) == 5
+    for r in done_on:
+        np.testing.assert_array_equal(r.output, by_id_off[r.request_id].output)
+    # the registry mirrored every launch recorded while installed (both
+    # instrumented runs), kernel-labeled
+    mirrored = {m.labels[0][1]: int(m.value)
+                for m in tel.registry.series("pallas_launches_total")}
+    total_on = {k: v for k, v in mirrored.items()}
+    assert set(total_on) == set(launches_on)
+    for k, v in launches_on.items():
+        assert total_on[k] >= v, (k, total_on, launches_on)
+
+
+def test_exports_parse_and_are_nonempty(tiny_model, tiny_store, tmp_path):
+    """One paged run emits all three exports: Prometheus text with
+    non-empty latency histograms and per-pool memory counters, parseable
+    Chrome-trace JSON, and a JSONL log with one object per line."""
+    tel = Telemetry(clock=ManualClock())
+    try:
+        eng, _ = _run(tiny_model, tiny_store, telemetry=tel)
+        eng.memory_stats()                         # mirror pool gauges
+    finally:
+        tel.uninstall_kernel_counter()
+
+    prom = tmp_path / "metrics.prom"
+    trace = tmp_path / "trace.json"
+    jsonl = tmp_path / "events.jsonl"
+    tel.write_prometheus(str(prom))
+    tel.write_chrome_trace(str(trace))
+    tel.write_jsonl(str(jsonl))
+
+    text = prom.read_text()
+    for needle in ("serving_ttft_seconds_bucket", "serving_e2e_seconds_sum",
+                   "serving_queue_wait_seconds_count",
+                   "adapter_memory_hits_total{pool=",
+                   "adapter_memory_swap_ins_total{pool=",
+                   "pallas_launches_total{kernel="):
+        assert needle in text, needle
+    # exposition is line-structured: every non-comment line is "name value"
+    for line in text.strip().splitlines():
+        if not line.startswith("#"):
+            name, value = line.rsplit(" ", 1)
+            float(value)
+
+    doc = json.loads(trace.read_text())
+    names = {ev.get("name") for ev in doc["traceEvents"]}
+    assert {"prefill", "decode_step", "queue", "decode"} <= names
+    spans = [ev for ev in doc["traceEvents"] if ev.get("ph") == "X"]
+    assert spans and all(ev["dur"] >= 0 and ev["ts"] >= 0 for ev in spans)
+
+    lines = jsonl.read_text().strip().splitlines()
+    assert len(lines) == len(tel.events)
+    assert all(json.loads(l) for l in lines)
